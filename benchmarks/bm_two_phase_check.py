@@ -1,0 +1,49 @@
+"""Accuracy validation of the two-phase bound management (DESIGN.md §9).
+
+Trains the paper's CNN with iterative BM (paper) vs two-phase BM (ours) under
+the otherwise-identical NM+BM RPU model — the optimized scheme must match the
+paper scheme's test error (it trades worst-case recoverable range 2^10*alpha
+for fixed 16*alpha; the CNN's logits never need more than ~16*alpha).
+
+  PYTHONPATH=src python -m benchmarks.bm_two_phase_check
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.core import device as dev
+from repro.models.lenet import LeNetConfig
+from repro.train import cnn
+
+RESULT = os.path.join("results", "cnn", "bm_two_phase.json")
+
+
+def run(epochs: int = 8, force: bool = False):
+    if os.path.exists(RESULT) and not force:
+        with open(RESULT) as f:
+            out = json.load(f)
+        print(f"[bm2] cached: {out}")
+        return out
+    proto = dict(epochs=epochs, batch=8, n_train=4096, n_test=2048)
+    base = dev.rpu_nm_bm()
+    print("[bm2] iterative BM (paper)")
+    it = cnn.train(LeNetConfig.uniform(base), verbose=True, **proto)
+    print("[bm2] two-phase BM (ours)")
+    two = cnn.train(LeNetConfig.uniform(
+        dataclasses.replace(base, bm_mode="two_phase")), verbose=True,
+        **proto)
+    out = {"iterative_err": it["mean_last5"],
+           "two_phase_err": two["mean_last5"]}
+    os.makedirs(os.path.dirname(RESULT), exist_ok=True)
+    with open(RESULT, "w") as f:
+        json.dump(out, f)
+    print(f"[bm2] iterative {100 * out['iterative_err']:.2f}% vs "
+          f"two-phase {100 * out['two_phase_err']:.2f}%")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Aggregate the cached CNN suite runs into the paper's figure tables.
+
+One function per paper figure; each prints a side-by-side comparison of the
+paper's reported numbers and ours (synthetic-MNIST protocol — levels shift,
+ordering/phenomena must match; DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from benchmarks import cnn_suite
+
+# Paper's reported test errors (%), used for side-by-side reporting.
+PAPER = {
+    "fp_baseline": 0.8,
+    "fig3a_baseline": 15.0,            # "between 10% and 20%"
+    "fig3a_no_noise_no_bound": 1.5,
+    "fig3a_no_noise": 10.0,            # sudden failure after ~epoch 8
+    "fig3a_no_bound": 10.0,
+    "fig3b_nm_only": 10.0,
+    "fig3b_bm_only": 10.0,
+    "fig3b_nm_bm": 1.7,
+    "fig4_novar_all": 1.05,
+    "fig4_novar_K1K2": 1.15,
+    "fig4_novar_W3W4": 1.3,
+    "fig4_novar_K1": 1.4,
+    "fig4_novar_K2": 1.2,
+    "fig4_dpw4_K2": 1.45,
+    "fig4_dpw13_K2": 1.35,
+    "fig5_bl1": 1.3,
+    "fig5_bl40": 1.7,                  # "did not improve" over BL=10
+    "fig5_bl1_um": 1.1,
+    "fig5_bl10_um": 1.7,               # "no improvement" at BL=10
+    "fig6_full_dpw13_K2": 0.8,
+    # bound-stress surrogate: paper mechanism (Fig. 3A blue) at alpha=3
+    "stress_a3_no_noise": 10.0,        # expect bound-driven failure
+    "stress_a3_nm_bm": 1.7,            # BM must rescue
+}
+
+
+def _fmt(name: str, res: Optional[Dict]) -> str:
+    paper = PAPER.get(name)
+    paper_s = f"{paper:5.2f}%" if paper is not None else "    --"
+    if res is None:
+        return f"  {name:<28} paper={paper_s}  ours=   (not yet run)"
+    mean = res.get("mean_last5")
+    std = res.get("std_last5") or 0.0
+    if mean is None:
+        return f"  {name:<28} paper={paper_s}  ours=   (in progress)"
+    return (f"  {name:<28} paper={paper_s}  ours={100 * mean:5.2f}% "
+            f"+-{100 * std:4.2f}")
+
+
+def report(figure: str) -> List[str]:
+    lines = [f"=== {figure.upper()} ==="]
+    for name in cnn_suite.FIGURES[figure]:
+        lines.append(_fmt(name, cnn_suite.load_result(name)))
+    return lines
+
+
+def report_all() -> str:
+    out = []
+    for fig in cnn_suite.FIGURES:
+        out.extend(report(fig))
+        out.append("")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(report_all())

@@ -1,0 +1,99 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+``python -m benchmarks.run``          fast mode: analytic benches run fully,
+                                      training figures report cached suite
+                                      results (results/cnn/*.json), micro-
+                                      benchmarks of the kernels execute.
+``python -m benchmarks.run --full``   additionally trains any missing CNN
+                                      suite runs (hours).
+
+Prints ``name,us_per_call,derived`` CSV rows at the end, as required.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def bench_kernels(csv_rows):
+    """Micro-benchmark the analog hot-spot ops.
+
+    On CPU the Pallas kernels run in interpret mode (Python body), so these
+    numbers prove the paths work and give the simulator's cost — TPU wall
+    clock is the kernels' target, not measurable here.
+    """
+    import jax
+    from repro.core.device import RPUConfig, sample_device_maps
+    from repro.core import update as up
+    from repro.core.tile import analog_mvm_reference
+
+    cfg = RPUConfig()
+    w = jax.random.normal(jax.random.key(1), (128, 513)) * 0.2
+    x = jax.random.normal(jax.random.key(2), (256, 513)) * 0.5
+    key = jax.random.key(3)
+
+    f_ref = jax.jit(lambda: analog_mvm_reference(w, x, key, cfg)[0])
+    f_ref()
+    t0 = time.time()
+    for _ in range(20):
+        jax.block_until_ready(f_ref())
+    t_ref = (time.time() - t0) / 20 * 1e6
+    print(f"[kernels] noisy_mvm reference: {t_ref:.0f} us/call")
+    csv_rows.append(("noisy_mvm_ref_cpu", t_ref, "W3-sized read"))
+
+    maps = sample_device_maps(jax.random.key(5), 128, 513, cfg)
+    d = jax.random.normal(jax.random.key(6), (256, 128)) * 0.1
+    f_pu = jax.jit(lambda: up.pulse_update(w, maps, x, d, key, cfg, 0.01))
+    f_pu()
+    t0 = time.time()
+    for _ in range(10):
+        jax.block_until_ready(f_pu())
+    t_pu = (time.time() - t0) / 10 * 1e6
+    print(f"[kernels] pulse_update (BL=10, 256 samples): {t_pu:.0f} us/call")
+    csv_rows.append(("pulse_update_cpu", t_pu, "W3-sized update"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    csv_rows = []
+
+    # --- Table 2: AlexNet RPU timing model (analytic, instant) -------------
+    from benchmarks import table2_alexnet
+    t2 = table2_alexnet.run()
+    csv_rows.append(("table2_rpu_image_us", t2["t_rpu_us"],
+                     f"bottleneck={t2['bottleneck']}"))
+
+    # --- Figures 3-6: CNN ablation suite ------------------------------------
+    from benchmarks import cnn_suite, figures
+    if args.full:
+        for name in cnn_suite.RUNS:
+            cnn_suite.run_one(name)
+    print()
+    print(figures.report_all())
+    for fig, names in cnn_suite.FIGURES.items():
+        done = sum(1 for n in names if cnn_suite.load_result(n))
+        csv_rows.append((f"{fig}_runs_done", float(done),
+                         f"of {len(names)}"))
+
+    # --- kernel micro-benchmarks --------------------------------------------
+    bench_kernels(csv_rows)
+
+    # --- roofline over dry-run artifacts ------------------------------------
+    from benchmarks import roofline
+    rows = roofline.run()
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        csv_rows.append(("roofline_cells", float(len(rows)),
+                         f"worst={worst['arch']}x{worst['cell']}"))
+
+    print("\nname,us_per_call,derived")
+    for name, val, derived in csv_rows:
+        print(f"{name},{val:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,289 @@
+"""Regenerate the data tables inside EXPERIMENTS.md from results/.
+
+Replaces the <!-- X_TABLE --> markers with current artifacts; hypothesis
+text for §Perf lives here (code-reviewed prose, regenerated tables).
+
+  PYTHONPATH=src python -m benchmarks.update_experiments
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+from typing import Dict, List, Optional
+
+from benchmarks import cnn_suite, figures, roofline
+
+EXP = "EXPERIMENTS.md"
+
+
+def _repro_table() -> str:
+    return "```\n" + figures.report_all() + "\n```"
+
+
+def _dryrun_table() -> str:
+    rows = []
+    for p in sorted(glob.glob("results/dryrun/*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("variant") or r.get("analog"):
+            continue
+        name = os.path.basename(p)[:-5]
+        if r["status"] == "ok":
+            mem = r.get("memory_analysis") or {}
+            arg_gb = mem.get("argument_size_in_bytes", 0) / 2 ** 30
+            tmp_gb = mem.get("temp_size_in_bytes", 0) / 2 ** 30
+            rows.append(
+                f"| {r['arch']} | {r['cell']} | {r['mesh']} | ok | "
+                f"{r['compile_s']}s | {arg_gb:.1f} | {tmp_gb:.2f} | "
+                f"{r['collectives']['count']} |")
+        elif r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['cell']} | — | skipped | — | — "
+                        f"| — | — |")
+        else:
+            rows.append(f"| {r['arch']} | {r['cell']} | ? | ERROR | — | — "
+                        f"| — | — |")
+    hdr = ("| arch | cell | mesh | status | compile | args GiB/dev | "
+           "temp GiB/dev | #coll ops (HLO) |\n|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def _roofline_table() -> str:
+    """Baseline cells only (variants/analog live in the §Perf log)."""
+    out_rows = []
+    for r in roofline.load_all():
+        if r.get("status") != "ok" or r.get("variant") or r.get("analog"):
+            continue
+        a = roofline.analyse(r)
+        if a:
+            out_rows.append(a)
+    return roofline.table(out_rows, fmt="md")
+
+
+def _load_cell(name: str) -> Optional[Dict]:
+    p = os.path.join("results", "dryrun", f"{name}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        r = json.load(f)
+    return roofline.analyse(r) if r.get("status") == "ok" else None
+
+
+# (baseline record, variant record, hypothesis + lesson) per iteration
+PERF_ITERATIONS = [
+    # --- cell A: kimi-k2 x train_4k (most collective-bound) ----------------
+    ("kimi_k2_1t_a32b__train_4k", "kimi_k2_1t_a32b__train_4k_moe_a2a",
+     "A1 kimi-k2 train_4k: GSPMD lowers the MoE scatter/gather dispatch to "
+     "'involuntary full rematerialization' (tensor replication) across 256 "
+     "chips; making the token exchange explicit (shard_map all_to_all over "
+     "the expert axis) should cut collective bytes by >100x "
+     "(napkin: 2 a2a of tokens*d vs replicating (E*C,d) buffers per layer).",
+     ),
+    ("kimi_k2_1t_a32b__train_4k_moe_a2a",
+     "kimi_k2_1t_a32b__train_4k_moe_a2a_cap10",
+     "A2 kimi-k2 train_4k: capacity factor 1.25 -> 1.0 trims 20% of expert "
+     "FLOPs and a2a payload (dropped tokens are the paper-standard "
+     "trade-off; aux loss keeps routing balanced).",
+     ),
+    ("kimi_k2_1t_a32b__train_4k_moe_a2a",
+     "kimi_k2_1t_a32b__train_4k_rematdots_a2a",
+     "A3 kimi-k2 train_4k (post-a2a, memory-bound): selective 'dots' remat "
+     "on top of a2a — save projection outputs, skip the full forward "
+     "replay; expect memory term down ~25%.",
+     ),
+    ("kimi_k2_1t_a32b__train_4k_pod2",
+     "kimi_k2_1t_a32b__train_4k_pod2_moe_a2a_cap10",
+     "A4 kimi-k2 train_4k MULTI-POD (2x16x16): the a2a dispatch fix must "
+     "hold across the pod axis too (all_to_all stays within the model "
+     "axis; only the DP gradient reduce crosses pods).",
+     ),
+    # --- cell B: qwen1.5-110b x train_4k (largest dense; memory-bound) -----
+    ("qwen1_5_110b__train_4k", "qwen1_5_110b__train_4k_noremat",
+     "B1 qwen110b train_4k: full per-layer remat recomputes the forward "
+     "(+33% dot FLOPs) and re-writes every activation; with 0.86 GB/chip "
+     "params the memory budget allows storing activations instead — "
+     "expect memory term ~-35%, compute term -25%.",
+     ),
+    ("qwen1_5_110b__train_4k", "qwen1_5_110b__train_4k_rematdots",
+     "B1' qwen110b train_4k: B1 was REFUTED because full no-remat "
+     "materialises the flash-attention inner products (O(S^2) traffic — "
+     "memory went 4.6x WORSE); the correct move is Megatron-style "
+     "*selective* checkpointing (save dot outputs, recompute attention "
+     "internals): expect memory below the full-remat baseline with "
+     "compute near no-remat.",
+     ),
+    ("qwen1_5_110b__prefill_32k", "qwen1_5_110b__prefill_32k_seqpar",
+     "B2 qwen110b prefill_32k: activations replicated across the model "
+     "axis make norm/elementwise regions duplicate HBM traffic 16x; "
+     "Megatron-style sequence sharding (seq->model) should cut the memory "
+     "term up to ~2x at the cost of extra all-gathers at attention "
+     "boundaries.",
+     ),
+    ("qwen1_5_110b__decode_32k", "qwen1_5_110b__decode_32k_kv8",
+     "B3 qwen110b decode_32k: decode streams the 13.7 TB global KV cache "
+     "every token — int8 KV quantisation halves cache bytes vs bf16.",
+     ),
+    ("qwen1_5_110b__decode_32k", "qwen1_5_110b__decode_32k_kv8_nofsdp",
+     "B3' qwen110b decode_32k: B3 halved the memory term but the cell is "
+     "*collective*-bound: FSDP re-gathers every weight shard per decoded "
+     "token. Inference wants TP-only sharding (weights resident): int8 KV "
+     "+ no-FSDP should collapse the collective term and flip the cell to "
+     "memory-bound at the cache-streaming roofline.",
+     ),
+    # --- cell C: deepseek-7b x train_4k ANALOG (paper-representative) ------
+    ("deepseek_7b__train_4k_analog",
+     "deepseek_7b__train_4k_analog_bm2",
+     "C1 deepseek-7b analog train_4k: hypothesis — the paper's iterative "
+     "bound management (data-dependent while loop, 10-read worst case) "
+     "dominates the analog overhead; two-phase BM (fixed 2 reads, "
+     "DESIGN.md §9) should cut read FLOPs ~5x. REFUTED by measurement: "
+     "XLA hoists the scale-commuting MVM out of the retry loop "
+     "((x/s)W = (xW)/s), so retries cost only elementwise work in the "
+     "lowered program — dot FLOPs identical. Lesson: the win of two-phase "
+     "BM is *physical* (deterministic 2-read array latency vs 11-read "
+     "worst case in a pipelined chip, paper Discussion), not simulation "
+     "FLOPs; bytes still -11%. Accuracy parity: "
+     "benchmarks/bm_two_phase_check.py.",
+     ),
+    ("deepseek_7b__train_4k_analog_flatrng",
+     "deepseek_7b__train_4k_analog",
+     "C1' deepseek-7b analog train_4k: the *measured* dominant term was "
+     "collective (240s!), attributed via per-op HLO metadata to "
+     "collective-permutes under 'slice' ops: the simulation RNG built a "
+     "flat 1-D iota, sliced it ([:n]/[n:]), and reshaped — SPMD halo "
+     "exchanges inside every noisy read, charged x loop trip counts. "
+     "Fix: shaped per-dim counters (bit-identical draws, trivially "
+     "partitionable). Expect the collective term to collapse toward the "
+     "digital cell's ~5s.",
+     ),
+    ("deepseek_7b__train_4k_analog",
+     "deepseek_7b__train_4k_analog_bm2_noremat",
+     "C2 deepseek-7b analog: remat recomputes the *noisy* forward reads "
+     "(a fresh physical read each time — extra analog reads AND extra "
+     "FLOPs); storing digitised activations (as a real chip would) plus "
+     "two-phase BM should cut both compute and collective terms.",
+     ),
+    # --- secondary cells ----------------------------------------------------
+    ("mamba2_130m__train_4k", "mamba2_130m__train_4k_nofsdp",
+     "D1 mamba2 train_4k (worst small-model fraction): FSDP all-gathers "
+     "dominate for a 130M model whose full params fit every chip 400x "
+     "over; replicating params (pure DP) removes the per-layer gathers.",
+     ),
+    ("mixtral_8x7b__train_4k", "mixtral_8x7b__train_4k_cap10",
+     "D2 mixtral train_4k: capacity 1.25 -> 1.0 trims expert FLOPs/bytes "
+     "~20% (8 experts don't divide the 16-way axis, so the a2a path "
+     "doesn't apply; dense-dispatch capacity is the available lever).",
+     ),
+    ("deepseek_7b__train_4k", "deepseek_7b__train_4k_rematdots",
+     "D3 deepseek-7b train_4k: selective 'dots' remat (as B1') on the "
+     "7B dense cell — expect the same memory-term cut.",
+     ),
+]
+
+
+def _fmt_cell(a: Dict) -> str:
+    return (f"compute {a['compute_s']:.3e}s / memory {a['memory_s']:.3e}s / "
+            f"coll {a['collective_s']:.3e}s -> bound={a['bottleneck']}, "
+            f"roofline {100 * a['roofline_fraction']:.1f}%")
+
+
+def _perf_log() -> str:
+    lines: List[str] = []
+    for base_name, var_name, hypothesis in PERF_ITERATIONS:
+        base = _load_cell(base_name)
+        var = _load_cell(var_name)
+        lines.append(f"**{hypothesis}**")
+        if base is None or var is None:
+            missing = var_name if base is not None else base_name
+            lines.append(f"  - status: pending ({missing} not yet compiled)")
+            lines.append("")
+            continue
+        dom = base["bottleneck"]
+        key = {"compute": "compute_s", "memory": "memory_s",
+               "collective": "collective_s"}[dom]
+        delta = (base[key] - var[key]) / base[key]
+        verdict = "CONFIRMED" if delta > 0.05 else (
+            "refuted" if delta < -0.05 else "neutral (<5%)")
+        lines.append(f"  - before: {_fmt_cell(base)}")
+        lines.append(f"  - after:  {_fmt_cell(var)}")
+        lines.append(f"  - dominant term ({dom}) delta: {100 * delta:+.1f}% "
+                     f"-> **{verdict}**")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def _perf_summary() -> str:
+    """Best-of-tried per hillclimbed cell (a refuted variant never wins —
+    the baseline stands when the iterations said so)."""
+    cells = [
+        ("kimi-k2 train_4k (most collective-bound pick)",
+         "kimi_k2_1t_a32b__train_4k",
+         ["kimi_k2_1t_a32b__train_4k_moe_a2a",
+          "kimi_k2_1t_a32b__train_4k_moe_a2a_cap10",
+          "kimi_k2_1t_a32b__train_4k_rematdots_a2a"]),
+        ("qwen1.5-110b train_4k (largest dense)",
+         "qwen1_5_110b__train_4k",
+         ["qwen1_5_110b__train_4k_noremat",
+          "qwen1_5_110b__train_4k_rematdots"]),
+        ("qwen1.5-110b decode_32k (serving)",
+         "qwen1_5_110b__decode_32k",
+         ["qwen1_5_110b__decode_32k_kv8",
+          "qwen1_5_110b__decode_32k_kv8_nofsdp"]),
+        ("mamba2 train_4k (worst fraction pick)",
+         "mamba2_130m__train_4k",
+         ["mamba2_130m__train_4k_nofsdp"]),
+        ("deepseek-7b train_4k analog (paper-technique pick)",
+         "deepseek_7b__train_4k_analog_flatrng",
+         ["deepseek_7b__train_4k_analog",
+          "deepseek_7b__train_4k_analog_bm2",
+          "deepseek_7b__train_4k_analog_bm2_noremat"]),
+    ]
+    lines = ["| cell | baseline roof% (bound, step-bound s) | best variant | "
+             "optimized roof% (bound, step-bound s) | step-time gain |",
+             "|---|---|---|---|---|"]
+
+    def tbound(a):
+        return max(a["compute_s"], a["memory_s"], a["collective_s"])
+
+    for label, base_name, variants in cells:
+        ab = _load_cell(base_name)
+        if ab is None:
+            lines.append(f"| {label} | pending | — | — | — |")
+            continue
+        best_name, best = "baseline", ab
+        for v in variants:
+            av = _load_cell(v)
+            if av is not None and tbound(av) < tbound(best):
+                best_name, best = v.split("__")[-1], av
+        lines.append(
+            f"| {label} | {100 * ab['roofline_fraction']:.1f}% "
+            f"({ab['bottleneck']}, {tbound(ab):.2f}s) | {best_name} | "
+            f"{100 * best['roofline_fraction']:.1f}% "
+            f"({best['bottleneck']}, {tbound(best):.2f}s) | "
+            f"{tbound(ab) / tbound(best):.1f}x |")
+    return "\n".join(lines)
+
+
+def inject(md: str, marker: str, content: str) -> str:
+    pattern = rf"<!-- {marker} -->.*?(?=\n## |\n### |\Z)"
+    repl = f"<!-- {marker} -->\n\n{content}\n"
+    return re.sub(pattern, repl.replace("\\", "\\\\"), md, flags=re.S)
+
+
+def main():
+    with open(EXP) as f:
+        md = f.read()
+    md = inject(md, "REPRO_TABLE", _repro_table())
+    md = inject(md, "DRYRUN_TABLE", _dryrun_table())
+    md = inject(md, "ROOFLINE_TABLE", _roofline_table())
+    md = inject(md, "PERF_LOG", _perf_log())
+    md = inject(md, "PERF_SUMMARY", _perf_summary())
+    with open(EXP, "w") as f:
+        f.write(md)
+    print("[update_experiments] EXPERIMENTS.md refreshed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Serve a small LM with batched requests: prefill + greedy decode.
+
+Uses the serving engine (KV caches / SSM states / SWA ring buffers) on the
+reduced configs; on a TPU pod the same engine serves the full configs via
+``repro.launch.serve``.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch mixtral_8x7b]
+"""
+
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral_8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    out = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+                gen=args.gen, smoke=True)
+    print("generated token ids (first request):", out[0][:16], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Architecture configs: exact assigned values + reduced smoke variants."""

@@ -1,0 +1,163 @@
+"""Model / run configuration dataclasses shared by all architectures.
+
+Each assigned architecture gets one ``src/repro/configs/<id>.py`` exporting
+``CONFIG`` (the exact published numbers) and ``smoke_config()`` (a reduced
+same-family config for CPU smoke tests).  ``shapes.py`` defines the assigned
+input-shape cells; ``registry.py`` resolves ``--arch`` names.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.device import RPUConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int             # per-expert hidden dim
+    capacity_factor: float = 1.25
+    n_shared_experts: int = 0    # kimi-k2 style always-on shared expert(s)
+    dispatch: str = "gather"     # 'gather' (GSPMD scatter/gather) | 'a2a'
+                                 # (shard_map expert-parallel all-to-all;
+                                 # needs n_experts % model_axis == 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int                 # N (ssm_state)
+    d_head: int = 64             # SSD head dim P
+    expand: int = 2              # d_inner = expand * d_model
+    chunk: int = 128             # SSD chunk length
+    d_conv: int = 4              # short causal conv width
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None          # default d_model // n_heads
+    qkv_bias: bool = False                # qwen1.5
+    qk_norm: bool = False                 # qwen3
+    swa_window: int = 0                   # sliding-window attention (mixtral)
+    rope_theta: float = 1e4
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None       # ssm / hybrid families
+    encoder_layers: int = 0               # enc-dec (seamless): encoder depth
+    frontend: str = "none"                # none | vision_stub | audio_stub
+    frontend_tokens: int = 0              # patches/frames prepended at train
+    norm_eps: float = 1e-5
+    # numerics
+    param_dtype: jnp.dtype = jnp.bfloat16
+    act_dtype: jnp.dtype = jnp.bfloat16
+    kv_cache_quant: bool = False          # int8 KV cache (beyond-paper perf)
+    use_flash_kernel: bool = False        # Pallas fused attention (TPU;
+                                          # interpret-mode on CPU) instead of
+                                          # the XLA scan fallback
+    # training
+    remat: bool = True                    # checkpoint each layer block
+    remat_policy: str = "full"            # 'full' | 'dots' (Megatron-style
+                                          # selective: save projection
+                                          # outputs, recompute attention
+                                          # internals/elementwise)
+    # analog (RPU) integration: when set, projections run on analog tiles
+    analog: Optional[RPUConfig] = None
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // self.n_heads)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run the 500k-token long-context cell?"""
+        return self.family in ("ssm", "hybrid") or self.swa_window > 0
+
+    @property
+    def has_decoder(self) -> bool:
+        return True   # all assigned archs have an autoregressive decoder
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for 6ND."""
+        d, l = self.d_model, self.n_layers
+        hd = self.head_dim
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * hd * d
+        if self.moe:
+            ffn = 3 * d * self.moe.d_ff_expert \
+                * (self.moe.n_experts + self.moe.n_shared_experts) \
+                + d * self.moe.n_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        ssm = 0
+        if self.ssm is not None:
+            din = self.ssm.expand * d
+            ssm = d * (2 * din + 2 * self.ssm.d_state) + din * d
+        if self.family == "ssm":
+            block = ssm
+        elif self.family == "hybrid":
+            block = attn + ffn + ssm
+        else:
+            block = attn + ffn
+        enc = self.encoder_layers * block
+        return emb + l * block + enc
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if not self.moe:
+            return self.param_count()
+        d, l = self.d_model, self.n_layers
+        full_ffn = 3 * d * self.moe.d_ff_expert * (
+            self.moe.n_experts + self.moe.n_shared_experts)
+        act_ffn = 3 * d * self.moe.d_ff_expert * (
+            self.moe.top_k + self.moe.n_shared_experts)
+        return self.param_count() - l * (full_ffn - act_ffn)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (input-shape) cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+TRAIN_4K = ShapeCell("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeCell("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeCell("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeCell("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES: Tuple[ShapeCell, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K,
+                                     LONG_500K)
+
+
+def shape_by_name(name: str) -> ShapeCell:
+    for s in ALL_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def cell_applicable(cfg: ModelConfig, cell: ShapeCell) -> Tuple[bool, str]:
+    """Is this (arch x shape) cell runnable?  (DESIGN.md §4)."""
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skip: pure full-attention arch; 500k decode needs "
+                       "sub-quadratic attention (DESIGN.md §4)")
+    return True, ""

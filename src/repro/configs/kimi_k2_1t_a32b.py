@@ -1,0 +1,20 @@
+"""kimi-k2-1t-a32b [moe]: 61L d_model=7168 64H (GQA kv=8, d_head=128)
+d_ff(expert)=2048 vocab=163840, MoE 384 experts top-8 + 1 shared —
+trillion-parameter MoE, 32B active [Kimi K2 paper table]."""
+import dataclasses
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe", n_layers=61, d_model=7168,
+    n_heads=64, n_kv_heads=8, d_head=128, d_ff=2048, vocab=163840,
+    rope_theta=5e6,
+    moe=MoEConfig(n_experts=384, top_k=8, d_ff_expert=2048,
+                  n_shared_experts=1))
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_head=16, d_ff=64, vocab=256,
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=64,
+                      n_shared_experts=1))

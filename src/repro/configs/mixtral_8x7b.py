@@ -1,0 +1,18 @@
+"""mixtral-8x7b [moe]: 32L d_model=4096 32H (GQA kv=8) vocab=32000,
+MoE 8 experts top-2 (d_ff_expert=14336), SWA window 4096
+[arXiv:2401.04088]."""
+import dataclasses
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b", family="moe", n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=8, d_ff=14336, vocab=32000,
+    swa_window=4096, rope_theta=1e6,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=14336))
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=256, swa_window=32,
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=128))

@@ -1,0 +1,17 @@
+"""pixtral-12b [vlm]: 40L d_model=5120 32H (GQA kv=8, d_head=128)
+d_ff=14336 vocab=131072 — pixtral-ViT frontend (STUB: precomputed patch
+embeddings; DESIGN.md §4) + mistral-nemo backbone
+[hf:mistralai/Pixtral-12B-2409]."""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b", family="vlm", n_layers=40, d_model=5120,
+    n_heads=32, n_kv_heads=8, d_head=128, d_ff=14336, vocab=131072,
+    rope_theta=1e7, frontend="vision_stub", frontend_tokens=256)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_head=16, d_ff=128, vocab=256, frontend_tokens=16)

@@ -1,0 +1,53 @@
+"""--arch registry: resolves architecture ids to configs.
+
+Each ``configs/<id>.py`` exports ``CONFIG`` (exact published numbers, see the
+assignment table) and ``smoke_config()`` (reduced same-family config for CPU
+smoke tests).  ``lenet_mnist`` covers the paper's own CNN.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+ARCH_IDS: List[str] = [
+    "deepseek_7b",
+    "qwen1_5_110b",
+    "stablelm_3b",
+    "qwen3_14b",
+    "mamba2_130m",
+    "mixtral_8x7b",
+    "kimi_k2_1t_a32b",
+    "pixtral_12b",
+    "seamless_m4t_medium",
+    "hymba_1_5b",
+]
+
+_ALIASES = {
+    "deepseek-7b": "deepseek_7b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "stablelm-3b": "stablelm_3b",
+    "qwen3-14b": "qwen3_14b",
+    "mamba2-130m": "mamba2_130m",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "pixtral-12b": "pixtral_12b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "hymba-1.5b": "hymba_1_5b",
+}
+
+
+def canonical(name: str) -> str:
+    name = _ALIASES.get(name, name)
+    if name not in ARCH_IDS and name != "lenet_mnist":
+        raise KeyError(f"unknown arch '{name}'; known: {ARCH_IDS}")
+    return name
+
+
+def get_config(name: str, smoke: bool = False):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.smoke_config() if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False) -> Dict[str, object]:
+    return {a: get_config(a, smoke) for a in ARCH_IDS}

@@ -1,0 +1,21 @@
+"""Core RPU library: the paper's contribution as composable JAX modules.
+
+Layers:
+  device.py        - Table-1 device population models, multi-device mapping
+  tile.py          - physical crossbar tile (noisy/bounded MVM, array splits)
+  management.py    - noise / bound / update management (Eqs. 3-4)
+  update.py        - stochastic-pulse update cycle (Eq. 1) as MXU matmuls
+  analog_linear.py - differentiable analog dense layer (custom VJP = 3 cycles)
+  conv_mapping.py  - conv -> crossbar mapping (im2col column streaming)
+  perfmodel.py     - RPU-chip analytical timing model (Table 2 / Discussion)
+"""
+
+from repro.core.device import (  # noqa: F401
+    DeviceMaps, RPUConfig, rpu_baseline, rpu_full, rpu_nm_bm,
+    rpu_nm_bm_um_bl1, sample_device_maps)
+from repro.core.tile import (  # noqa: F401
+    TileState, analog_mvm, analog_mvm_reference, effective_weights,
+    init_tile, tile_backward, tile_forward, tile_update)
+from repro.core.update import (  # noqa: F401
+    expected_update, pulse_delta, pulse_update)
+from repro.core import analog_linear, conv_mapping, management, perfmodel  # noqa: F401

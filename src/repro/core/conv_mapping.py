@@ -1,0 +1,96 @@
+"""Conv -> crossbar mapping (the paper's contribution C1).
+
+A convolutional layer with kernels ``(M, k, k, d)`` is flattened to a
+parameter matrix ``K`` of size ``M x (k^2 d [+1 bias])``; the input volume is
+rearranged into the im2col matrix ``X (k^2 d x positions)`` so that
+
+    forward   Y = K X            (repeat the MVM for each position column)
+    backward  Z = K^T D          (then digital col2im scatter-add)
+    update    K <- K + eta D X^T (serial rank-1 pulse updates per column)
+
+We realise this by composing the *differentiable* im2col rearrangement with
+the analog linear layer: the analog layer's custom VJP performs the paper's
+backward/update cycles over the flattened ``batch x positions`` axis (the
+serial column streaming), while autodiff of the im2col primitive provides the
+exact digital col2im for the activation gradient — the paper's "results are
+organized to a volume" step, which is digital data movement, not array math.
+
+Supports stride, padding, dilation and non-square inputs/kernels, as the
+paper notes the mapping generalises to.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import analog_linear
+from repro.core.device import RPUConfig
+from repro.core.tile import TileState
+
+Array = jax.Array
+IntPair = Union[int, Tuple[int, int]]
+
+
+def _pair(v: IntPair) -> Tuple[int, int]:
+    return (v, v) if isinstance(v, int) else tuple(v)
+
+
+def im2col(x: Array, kernel: IntPair, stride: IntPair = 1,
+           padding: str = "VALID", dilation: IntPair = 1) -> Array:
+    """Extract convolution patches.
+
+    ``x``: (B, H, W, C) -> patches (B, H', W', C*kh*kw); feature order is
+    channel-major as produced by ``conv_general_dilated_patches`` with NHWC
+    spec (C outer, then kh, kw) — the same order the parameter matrix uses.
+    """
+    kh, kw = _pair(kernel)
+    sh, sw = _pair(stride)
+    dh, dw = _pair(dilation)
+    patches = jax.lax.conv_general_dilated_patches(
+        x, filter_shape=(kh, kw), window_strides=(sh, sw), padding=padding,
+        rhs_dilation=(dh, dw),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return patches
+
+
+def kernel_matrix_from_conv(kernels: Array) -> Array:
+    """(kh, kw, C, M) HWIO conv kernels -> parameter matrix K (M, C*kh*kw).
+
+    Feature order must match :func:`im2col` (channel-major: index =
+    c*kh*kw + ih*kw + iw).
+    """
+    kh, kw, c, m = kernels.shape
+    k = jnp.transpose(kernels, (3, 2, 0, 1))  # (M, C, kh, kw)
+    return k.reshape(m, c * kh * kw)
+
+
+def conv_to_matrix_shapes(out_channels: int, kernel: IntPair,
+                          in_channels: int, bias: bool = True
+                          ) -> Tuple[int, int]:
+    kh, kw = _pair(kernel)
+    return out_channels, in_channels * kh * kw + (1 if bias else 0)
+
+
+def init(key: Array, in_channels: int, out_channels: int, kernel: IntPair,
+         cfg: RPUConfig, bias: bool = True,
+         init_scale: Optional[float] = None) -> TileState:
+    kh, kw = _pair(kernel)
+    return analog_linear.init(
+        key, in_channels * kh * kw, out_channels, cfg, bias=bias,
+        init_scale=init_scale)
+
+
+def apply(state: TileState, x: Array, key: Array, cfg: RPUConfig, lr: Array,
+          *, kernel: IntPair, stride: IntPair = 1, padding: str = "VALID",
+          dilation: IntPair = 1, bias: bool = True,
+          mode: str = "analog") -> Array:
+    """Analog 2-D convolution: im2col + analog linear over position columns.
+
+    ``x``: (B, H, W, C) -> (B, H', W', M).
+    """
+    patches = im2col(x, kernel, stride, padding, dilation)
+    return analog_linear.apply(state, patches, key, cfg, lr,
+                               bias=bias, mode=mode)

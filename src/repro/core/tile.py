@@ -1,0 +1,245 @@
+"""AnalogTile: the physical RPU crossbar array simulation.
+
+A *tile* owns the physical weights of one logical weight matrix ``(out_f,
+in_f)`` mapped onto cross-point devices:
+
+* multi-device mapping (``cfg.devices_per_weight = #_d``) stores the logical
+  matrix ``#_d`` times as stacked physical row blocks — the paper's 416x401
+  layout for 13-device mapping of the 32x401 K2 array;
+* arrays larger than the physical limit (4096x4096, paper Discussion) are
+  *split*: output-dim splits are mathematically transparent (each output row
+  has its own integrator), but **contraction-dim splits matter** — each
+  partial read is a separate physical integration with its own additive noise
+  and its own signal bound, and the partial results are summed digitally.
+
+Every analog read draws fresh Gaussian noise (sigma) and clips elementwise at
+the integrator bound (+-alpha); the saturation flag feeds bound management.
+
+All functions are pure and jit/shard-compatible; ``cfg.use_pallas`` routes the
+inner MVM through the Pallas TPU kernel (``repro.kernels``), otherwise the
+pure-jnp path below is used (it is also the kernels' oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.device import DeviceMaps, RPUConfig, sample_device_maps
+from repro.core import management
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+class TileState:
+    """Physical state of one crossbar tile.
+
+    Attributes:
+      w:    physical weights, shape ``(#_d * out_f, in_f)``.
+      maps: materialized per-device maps, or ``None`` when ``cfg.seeded_maps``.
+      seed: key the device population was (or is re-)generated from.
+    """
+
+    __slots__ = ("w", "maps", "seed")
+
+    def __init__(self, w: Array, maps: Optional[DeviceMaps], seed: Array):
+        self.w = w
+        self.maps = maps
+        self.seed = seed
+
+    def tree_flatten(self):
+        return (self.w, self.maps, self.seed), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def rows_phys(self) -> int:
+        return self.w.shape[0]
+
+    @property
+    def cols(self) -> int:
+        return self.w.shape[1]
+
+
+def init_tile(key: jax.Array, out_features: int, in_features: int,
+              cfg: RPUConfig, init_scale: Optional[float] = None,
+              w_init: Optional[Array] = None) -> TileState:
+    """Create a tile; replicates initial weights across the #_d device rows."""
+    k_w, k_dev = jax.random.split(key)
+    if w_init is None:
+        if init_scale is None:
+            # keep inits well inside the (mean) conductance bound
+            init_scale = min(1.0 / (in_features ** 0.5), cfg.w_bound / 2.0)
+        w_init = jax.random.uniform(
+            k_w, (out_features, in_features), dtype=cfg.dtype,
+            minval=-init_scale, maxval=init_scale)
+    else:
+        w_init = w_init.astype(cfg.dtype)
+    w_phys = jnp.tile(w_init, (cfg.devices_per_weight, 1))
+    maps = None
+    if not cfg.seeded_maps:
+        maps = sample_device_maps(
+            k_dev, w_phys.shape[0], w_phys.shape[1], cfg)
+        # initial programming must respect each device's own bound
+        w_phys = jnp.clip(w_phys, -maps.bound, maps.bound)
+    return TileState(w=w_phys, maps=maps, seed=k_dev)
+
+
+def tile_maps(state: TileState, cfg: RPUConfig) -> DeviceMaps:
+    """Device maps — stored, or regenerated from the tile seed (seeded mode)."""
+    if state.maps is not None:
+        return state.maps
+    return sample_device_maps(state.seed, state.w.shape[0], state.w.shape[1],
+                              cfg)
+
+
+def effective_weights(state: TileState, cfg: RPUConfig) -> Array:
+    """Logical weights: digital mean over the #_d physical replicas."""
+    d = cfg.devices_per_weight
+    if d == 1:
+        return state.w
+    out_f = state.w.shape[0] // d
+    return jnp.mean(state.w.reshape(d, out_f, state.w.shape[1]), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Raw analog MVM (one physical read, with contraction-dim array splits)
+# ---------------------------------------------------------------------------
+
+def _num_splits(contraction_dim: int, limit: int) -> int:
+    return max(1, -(-contraction_dim // limit))
+
+
+def analog_mvm(w: Array, x: Array, key: jax.Array, cfg: RPUConfig,
+               *, transpose: bool = False) -> Tuple[Array, Array]:
+    """One physical array read: ``y = clip(W x + sigma*xi, +-alpha)``.
+
+    Args:
+      w: physical weights ``(R, C)``.
+      x: inputs ``(..., C)`` (or ``(..., R)`` when ``transpose``).
+      transpose: backward-cycle read ``z = W^T d`` (inputs on the rows).
+
+    Returns ``(y, sat)`` where ``sat`` is a per-vector bool: any output
+    channel of any partial read hit the integrator bound.  Contraction-dim
+    splits (arrays larger than ``max_array_{rows,cols}``) each contribute
+    independent read noise and are bounded *before* the digital summation.
+    """
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        return kops.noisy_mvm(w, x, key, cfg, transpose=transpose)
+    return analog_mvm_reference(w, x, key, cfg, transpose=transpose)
+
+
+def analog_mvm_reference(w: Array, x: Array, key: jax.Array, cfg: RPUConfig,
+                         *, transpose: bool = False) -> Tuple[Array, Array]:
+    """Pure-jnp analog MVM (the oracle for the Pallas kernel)."""
+    r, c = w.shape
+    if transpose:
+        contraction, limit = r, cfg.max_array_rows
+    else:
+        contraction, limit = c, cfg.max_array_cols
+    s = _num_splits(contraction, limit)
+
+    wt = w.T if transpose else w                      # (out_dim, K)
+    out_dim, k_dim = wt.shape
+    assert x.shape[-1] == k_dim, (x.shape, wt.shape, transpose)
+
+    batch_shape = x.shape[:-1]
+    alpha = jnp.asarray(cfg.out_bound, x.dtype)
+    noise = cfg.read_noise if (cfg.noise_backward if transpose
+                               else cfg.noise_forward) else 0.0
+
+    def _normal(k, shape):
+        if cfg.fast_rng:
+            from repro.utils import fastrng
+            return fastrng.normal(k, shape, dtype=x.dtype)
+        return jax.random.normal(k, shape, dtype=x.dtype)
+
+    if s == 1:
+        y_clean = jnp.einsum("...k,ok->...o", x, wt,
+                             preferred_element_type=jnp.float32)
+        y_clean = y_clean.astype(x.dtype)
+        if noise > 0.0:
+            y_noisy = y_clean + noise * _normal(key, y_clean.shape)
+        else:
+            y_noisy = y_clean
+        sat = jnp.any(jnp.abs(y_noisy) >= alpha, axis=-1)
+        y = jnp.clip(y_noisy, -alpha, alpha)
+        return y, sat
+
+    # contraction-dim split: pad to s equal chunks, partial reads, digital sum
+    pad = s * ((k_dim + s - 1) // s) - k_dim
+    chunk = (k_dim + pad) // s
+    xp = jnp.pad(x, [(0, 0)] * len(batch_shape) + [(0, pad)])
+    wp = jnp.pad(wt, [(0, 0), (0, pad)])
+    xs = xp.reshape(*batch_shape, s, chunk)
+    ws = wp.reshape(out_dim, s, chunk)
+    partial = jnp.einsum("...sk,osk->...so", xs, ws,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    if noise > 0.0:
+        partial = partial + noise * _normal(key, partial.shape)
+    sat = jnp.any(jnp.abs(partial) >= alpha, axis=(-1, -2))
+    partial = jnp.clip(partial, -alpha, alpha)
+    y = jnp.sum(partial, axis=-2)
+    return y, sat
+
+
+# ---------------------------------------------------------------------------
+# Managed tile cycles (forward / backward)
+# ---------------------------------------------------------------------------
+
+def tile_forward(state: TileState, x: Array, key: jax.Array,
+                 cfg: RPUConfig) -> Array:
+    """Forward cycle ``y = W_eff x`` with NM/BM management + replica average."""
+    d = cfg.devices_per_weight
+
+    def mvm(xx, kk):
+        return analog_mvm(state.w, xx, kk, cfg, transpose=False)
+
+    y_phys = management.with_management(mvm, x, key, cfg, backward=False)
+    if d == 1:
+        return y_phys
+    out_f = state.w.shape[0] // d
+    return jnp.mean(
+        y_phys.reshape(*y_phys.shape[:-1], d, out_f), axis=-2)
+
+
+def tile_backward(state: TileState, delta: Array, key: jax.Array,
+                  cfg: RPUConfig) -> Array:
+    """Backward cycle ``z = W_eff^T delta`` (transpose read, NM on inputs).
+
+    With multi-device mapping the error vector drives all #_d replica row
+    blocks simultaneously; the analog column currents sum over replicas and
+    the digital domain divides by #_d.
+    """
+    d = cfg.devices_per_weight
+    if d > 1:
+        delta = jnp.concatenate([delta] * d, axis=-1)  # (..., #_d * out_f)
+
+    def mvm(dd, kk):
+        return analog_mvm(state.w, dd, kk, cfg, transpose=True)
+
+    z = management.with_management(mvm, delta, key, cfg, backward=True)
+    if d > 1:
+        z = z / d
+    return z
+
+
+def tile_update(state: TileState, x: Array, delta: Array, key: jax.Array,
+                cfg: RPUConfig, lr: float) -> TileState:
+    """Update cycle: stochastic-pulse outer-product update (Eq. 1).
+
+    ``x``: (..., in_f) activations; ``delta``: (..., out_f) error signals;
+    leading axes (batch and/or conv positions) are flattened into serial
+    vector-update pairs exactly as the paper streams im2col columns.
+    """
+    from repro.core import update as update_lib  # local import, avoids cycle
+    new_w = update_lib.pulse_update(
+        state.w, tile_maps(state, cfg), x, delta, key, cfg, lr)
+    return TileState(w=new_w, maps=state.maps, seed=state.seed)

@@ -1,0 +1,167 @@
+"""Stochastic-pulse update cycle (Eq. 1) — TPU-native formulation.
+
+The hardware streams ``BL`` pulse slots; column driver ``j`` fires with
+probability ``min(|C_x x_j|, 1)`` (polarity ``sign(x_j)``), row driver ``i``
+with probability ``min(|C_d d_i|, 1)`` (polarity ``sign(d_i)``).  A device at
+``(i, j)`` increments by ``+dw_up(i,j)`` on a coincidence of equal net
+polarity and decrements by ``dw_dn(i,j)`` otherwise, with 30% cycle-to-cycle
+variation per coincidence event.
+
+TPU adaptation (DESIGN.md section 2): the coincidence count is a *matmul over
+the pulse-slot axis*.  With signed stream matrices ``A (B, BL, N)`` and
+``B (B, BL, M)`` (entries in {0, +-1}):
+
+    net_ij   = sum_{b,t} B[b,t,i] * A[b,t,j]        (up-coincidences minus down)
+    total_ij = sum_{b,t} |B[b,t,i]| * |A[b,t,j]|    (all coincidences)
+    count_up = (total + net)/2 ,  count_dn = (total - net)/2
+
+i.e. two MXU matmuls with contraction ``B*BL`` — mathematically identical to
+the serial per-sample rank-1 pulse updates (weight-bound clipping applied per
+step instead of per pulse; bounded-difference property tested in
+``tests/test_update.py``).  Cycle-to-cycle variation aggregates exactly in
+distribution: a sum of ``c`` i.i.d. ``dw*(1+0.3 xi_k)`` events equals
+``c*dw + 0.3*dw*sqrt(c)*xi`` in distribution.
+
+Batched samples (minibatch and/or im2col positions) extend the contraction
+axis — each sample contributes its own ``BL`` slots, exactly like the serial
+column-streaming the paper describes for convolutional layers.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.device import DeviceMaps, RPUConfig
+from repro.core.management import um_factors
+
+Array = jax.Array
+
+
+def pulse_probabilities(v: Array, gain: Array) -> Tuple[Array, Array]:
+    """Stochastic translation: firing probability and polarity per driver."""
+    p = jnp.clip(jnp.abs(gain * v), 0.0, 1.0)
+    return p, jnp.sign(v)
+
+
+def sample_signed_streams(key: jax.Array, v: Array, gain: Array,
+                          bl: int, fast_rng: bool = True) -> Array:
+    """Sample signed pulse streams ``(..., BL, n)`` with entries {0, +-1}.
+
+    Each driver holds one value for the whole update cycle, so every slot of
+    a driver's stream carries the same polarity; slots are independent
+    Bernoulli draws (hardware: per-driver random pulse generators).
+    ``fast_rng`` uses the counter-hash generator (repro.utils.fastrng — same
+    design as the TPU kernel's on-chip PRNG, ~8x faster than threefry on CPU).
+    """
+    p, sgn = pulse_probabilities(v, gain)
+    shape = (*v.shape[:-1], bl, v.shape[-1])
+    if fast_rng:
+        from repro.utils import fastrng
+        u = fastrng.uniform(key, shape, dtype=v.dtype)
+    else:
+        u = jax.random.uniform(key, shape, dtype=v.dtype)
+    fire = (u < p[..., None, :]).astype(v.dtype)
+    return fire * sgn[..., None, :]
+
+
+def coincidence_counts(streams_rows: Array, streams_cols: Array
+                       ) -> Tuple[Array, Array]:
+    """Up/down coincidence counts via two pulse-slot matmuls.
+
+    ``streams_rows``: (..., BL, M) signed; ``streams_cols``: (..., BL, N).
+    Returns ``(count_up, count_dn)`` of shape (M, N), contracting all leading
+    axes and BL.
+    """
+    m = streams_rows.shape[-1]
+    n = streams_cols.shape[-1]
+    rows2 = streams_rows.reshape(-1, m)
+    cols2 = streams_cols.reshape(-1, n)
+    net = jnp.einsum("tm,tn->mn", rows2, cols2,
+                     preferred_element_type=jnp.float32)
+    total = jnp.einsum("tm,tn->mn", jnp.abs(rows2), jnp.abs(cols2),
+                       preferred_element_type=jnp.float32)
+    count_up = 0.5 * (total + net)
+    count_dn = 0.5 * (total - net)
+    return count_up, count_dn
+
+
+def pulse_delta(w_shape: Tuple[int, int], maps: DeviceMaps, x: Array,
+                delta: Array, key: jax.Array, cfg: RPUConfig, lr: float
+                ) -> Array:
+    """Raw physical weight change ``DW`` for one update cycle (no clipping).
+
+    ``x``: (..., in_f) column values; ``delta``: (..., rows_phys) row values
+    (already replicated for multi-device mapping by the caller).
+    """
+    if x.ndim == 1:
+        x = x[None]
+        delta = delta[None]
+    k_a, k_b, k_c = jax.random.split(key, 3)
+    cx, cd = um_factors(x, delta, cfg, lr)
+
+    a = sample_signed_streams(k_a, x, cx, cfg.bl, cfg.fast_rng)
+    b = sample_signed_streams(k_b, delta, cd, cfg.bl, cfg.fast_rng)
+    count_up, count_dn = coincidence_counts(b, a)
+
+    dw = count_up * maps.dw_up - count_dn * maps.dw_dn
+    if cfg.dw_min_ctoc > 0.0:
+        if cfg.fast_rng:
+            from repro.utils import fastrng
+            xi = fastrng.normal(k_c, dw.shape, dtype=dw.dtype)
+        else:
+            xi = jax.random.normal(k_c, dw.shape, dtype=dw.dtype)
+        var = (count_up * maps.dw_up ** 2 + count_dn * maps.dw_dn ** 2)
+        dw = dw + cfg.dw_min_ctoc * jnp.sqrt(var) * xi
+    return dw.astype(cfg.dtype)
+
+
+def pulse_update(w: Array, maps: DeviceMaps, x: Array, delta: Array,
+                 key: jax.Array, cfg: RPUConfig, lr: float) -> Array:
+    """Full update cycle on physical weights: pulses + per-device bound clip.
+
+    ``delta`` is the *logical* error vector (..., out_f); replication to the
+    #_d physical row blocks happens here (independent streams per physical
+    row driver).
+    """
+    d = cfg.devices_per_weight
+    if d > 1:
+        delta = jnp.concatenate([delta] * d, axis=-1)
+
+    if cfg.use_pallas:
+        # fused kernel path: sample streams here (vector op), then one
+        # kernel call does counts + maps + ctoc noise + bound clip.
+        if x.ndim == 1:
+            x, delta = x[None], delta[None]
+        k_a, k_b, k_c = jax.random.split(key, 3)
+        cx, cd = um_factors(x, delta, cfg, lr)
+        a = sample_signed_streams(k_a, x, cx, cfg.bl, cfg.fast_rng)
+        b = sample_signed_streams(k_b, delta, cd, cfg.bl, cfg.fast_rng)
+        from repro.kernels import ops as kops
+        return kops.pulse_update_fused(w, maps, b, a, k_c, cfg)
+
+    dw = pulse_delta(w.shape, maps, x, delta, key, cfg, lr)
+    return jnp.clip(w + dw, -maps.bound, maps.bound)
+
+
+def expected_update(x: Array, delta: Array, cfg: RPUConfig, lr: float
+                    ) -> Array:
+    """E[DW] = BL * dw_min * (C_x x)(C_d d)^T = lr * d x^T  (Eq. 1).
+
+    Pure digital outer product — the oracle the stochastic scheme is tested
+    against, and the fast path for ``update_mode='expected'`` ablations.
+    """
+    if x.ndim == 1:
+        x = x[None]
+        delta = delta[None]
+    m = delta.shape[-1]
+    n = x.shape[-1]
+    # clipping of pulse probabilities at 1 saturates the expectation too
+    cx, cd = um_factors(x, delta, cfg, lr)
+    xs = jnp.clip(jnp.abs(cx * x), 0, 1.0) * jnp.sign(x)
+    ds = jnp.clip(jnp.abs(cd * delta), 0, 1.0) * jnp.sign(delta)
+    outer = jnp.einsum("...m,...n->mn", ds.reshape(-1, m), xs.reshape(-1, n),
+                       preferred_element_type=jnp.float32)
+    return (cfg.bl * cfg.dw_min * outer).astype(cfg.dtype)

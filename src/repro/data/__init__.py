@@ -1,0 +1,1 @@
+"""Data substrates: MNIST (real or synthetic) + LM token pipeline."""

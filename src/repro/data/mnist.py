@@ -1,0 +1,79 @@
+"""MNIST IDX loader with synthetic fallback.
+
+Looks for the canonical IDX files (``train-images-idx3-ubyte`` etc., raw or
+``.gz``) under ``$REPRO_MNIST_DIR`` or ``./data/mnist``; if absent, falls
+back to :mod:`repro.data.synthetic_mnist` and reports so (DESIGN.md §8).
+On a real cluster with the dataset present, the paper's experiments run on
+true MNIST with no code change.
+"""
+
+from __future__ import annotations
+
+import gzip
+import os
+import struct
+from typing import Optional, Tuple
+
+import numpy as np
+
+_FILES = {
+    "train_images": "train-images-idx3-ubyte",
+    "train_labels": "train-labels-idx1-ubyte",
+    "test_images": "t10k-images-idx3-ubyte",
+    "test_labels": "t10k-labels-idx1-ubyte",
+}
+
+
+def _find(directory: str, base: str) -> Optional[str]:
+    for suffix in ("", ".gz"):
+        p = os.path.join(directory, base + suffix)
+        if os.path.exists(p):
+            return p
+    return None
+
+
+def _read_idx(path: str) -> np.ndarray:
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "rb") as f:
+        zero, dtype_code, ndim = struct.unpack(">HBB", f.read(4))
+        assert zero == 0, f"bad IDX magic in {path}"
+        shape = struct.unpack(">" + "I" * ndim, f.read(4 * ndim))
+        data = np.frombuffer(f.read(), dtype=np.uint8)
+    return data.reshape(shape)
+
+
+def mnist_dir() -> str:
+    return os.environ.get("REPRO_MNIST_DIR", os.path.join("data", "mnist"))
+
+
+def available() -> bool:
+    d = mnist_dir()
+    return all(_find(d, b) is not None for b in _FILES.values())
+
+
+def load_splits(n_train: Optional[int] = None, n_test: Optional[int] = None,
+                seed: int = 0, verbose: bool = True):
+    """(train_x, train_y), (test_x, test_y); images (N,28,28,1) in [0,1]."""
+    if available():
+        d = mnist_dir()
+        xtr = _read_idx(_find(d, _FILES["train_images"]))
+        ytr = _read_idx(_find(d, _FILES["train_labels"]))
+        xte = _read_idx(_find(d, _FILES["test_images"]))
+        yte = _read_idx(_find(d, _FILES["test_labels"]))
+        xtr = (xtr.astype(np.float32) / 255.0)[..., None]
+        xte = (xte.astype(np.float32) / 255.0)[..., None]
+        ytr = ytr.astype(np.int32)
+        yte = yte.astype(np.int32)
+        if n_train:
+            xtr, ytr = xtr[:n_train], ytr[:n_train]
+        if n_test:
+            xte, yte = xte[:n_test], yte[:n_test]
+        if verbose:
+            print(f"[data] real MNIST from {d}: {len(xtr)} train / {len(xte)} test")
+        return (xtr, ytr), (xte, yte)
+
+    from repro.data import synthetic_mnist
+    if verbose:
+        print("[data] real MNIST not found -> procedural synthetic MNIST "
+              "(DESIGN.md §8)")
+    return synthetic_mnist.load_splits(n_train or 8192, n_test or 2048, seed)

@@ -1,0 +1,66 @@
+"""Elastic scaling: reshard a running job onto a different device count.
+
+The mechanism (DESIGN.md §5): checkpoints store leaves unsharded; a restart
+builds a *new* mesh from the devices that are actually healthy and
+``tree_shardings`` + ``checkpoint.restore(shardings=...)`` lay the state out
+on it.  ``resize_plan`` computes the largest production-shaped mesh that fits
+the surviving device pool — the policy used after the straggler watchdog or
+a hard node failure trips.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class ResizePlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    n_devices: int
+    dropped: int
+
+    def make_mesh(self, devices: Optional[List] = None) -> Mesh:
+        devs = np.asarray(devices if devices is not None
+                          else jax.devices()[:self.n_devices])
+        return Mesh(devs.reshape(self.mesh_shape), self.axis_names)
+
+
+def resize_plan(n_available: int, *, model_parallel: int = 16,
+                multi_pod: bool = False) -> ResizePlan:
+    """Largest (data, model) mesh with the given TP degree that fits.
+
+    TP degree is kept fixed (changing it would change per-op shardings and
+    regenerate different collectives — safe but slower to recompile); the
+    data axis absorbs the loss.  E.g. 512 -> 497 healthy chips keeps
+    model=16 and gives data=31 (496 used, 1 idle).
+    """
+    names = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if multi_pod:
+        # keep 2 pods if possible, else fall back to single-pod
+        per_pod = n_available // 2
+        data = per_pod // model_parallel
+        if data >= 1:
+            shape = (2, data, model_parallel)
+        else:
+            return resize_plan(n_available, model_parallel=model_parallel,
+                               multi_pod=False)
+    else:
+        data = n_available // model_parallel
+        if data < 1:
+            # degrade TP until something fits (last resort)
+            mp = model_parallel
+            while mp > 1 and n_available // mp < 1:
+                mp //= 2
+            return ResizePlan((max(n_available // mp, 1), mp),
+                              ("data", "model"),
+                              (n_available // mp) * mp,
+                              n_available - (n_available // mp) * mp)
+        shape = (data, model_parallel)
+    used = int(np.prod(shape))
+    return ResizePlan(shape, names, used, n_available - used)

@@ -1,0 +1,111 @@
+"""Fault-tolerance runtime pieces: straggler watchdog, preemption hook,
+restart-with-retry driver glue.
+
+On a real multi-host deployment these cooperate with the cluster scheduler;
+everything here is host-side logic (no device code) and unit-testable on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    step_time: float
+    ewma: float
+    ratio: float
+    is_straggler: bool
+
+
+class StragglerWatchdog:
+    """Flags steps whose wall time exceeds ``threshold`` x the EWMA.
+
+    At pod scale, a slow host shows up as a globally slow step (synchronous
+    collectives) — the watchdog feeds the decision to (a) emit a monitoring
+    event, and (b) after ``trip_after`` consecutive slow steps, invoke the
+    mitigation callback (typically: checkpoint + exclude host + elastic
+    restart on the remaining mesh — see ``elastic.resize_plan``).
+    """
+
+    def __init__(self, threshold: float = 2.0, halflife: int = 50,
+                 trip_after: int = 5,
+                 on_trip: Optional[Callable[[StragglerReport], None]] = None):
+        self.threshold = threshold
+        self.decay = 0.5 ** (1.0 / halflife)
+        self.trip_after = trip_after
+        self.on_trip = on_trip
+        self.ewma: Optional[float] = None
+        self._consecutive = 0
+        self.reports: List[StragglerReport] = []
+
+    def observe(self, step: int, step_time: float) -> StragglerReport:
+        if self.ewma is None:
+            self.ewma = step_time
+        ratio = step_time / max(self.ewma, 1e-9)
+        slow = ratio > self.threshold
+        rep = StragglerReport(step, step_time, self.ewma, ratio, slow)
+        self.reports.append(rep)
+        if slow:
+            self._consecutive += 1
+            if self._consecutive >= self.trip_after and self.on_trip:
+                self.on_trip(rep)
+                self._consecutive = 0
+        else:
+            self._consecutive = 0
+            # only fold healthy steps into the EWMA (a straggler must not
+            # poison the baseline)
+            self.ewma = self.decay * self.ewma + (1 - self.decay) * step_time
+        return rep
+
+
+class PreemptionHandler:
+    """SIGTERM-triggered graceful shutdown: request a final checkpoint at the
+    next step boundary instead of dying mid-allreduce."""
+
+    def __init__(self):
+        self._requested = threading.Event()
+        self._installed = False
+
+    def install(self):
+        if not self._installed:
+            signal.signal(signal.SIGTERM, self._handler)
+            self._installed = True
+        return self
+
+    def _handler(self, signum, frame):
+        self._requested.set()
+
+    def preemption_requested(self) -> bool:
+        return self._requested.is_set()
+
+    def simulate(self):           # for tests
+        self._requested.set()
+
+
+def run_with_restarts(make_state: Callable[[], Dict],
+                      run: Callable[[Dict], None],
+                      max_restarts: int = 3,
+                      on_restart: Optional[Callable[[int, BaseException],
+                                                    None]] = None) -> int:
+    """Driver-level restart loop: (re)build state (restoring the newest
+    checkpoint) and run; transient failures restart up to ``max_restarts``."""
+    attempts = 0
+    while True:
+        try:
+            state = make_state()
+            run(state)
+            return attempts
+        except KeyboardInterrupt:
+            raise
+        except BaseException as e:   # noqa: BLE001 - node failure simulation
+            attempts += 1
+            if on_restart:
+                on_restart(attempts, e)
+            if attempts > max_restarts:
+                raise

@@ -1,0 +1,181 @@
+"""Logical-axis sharding rules (MaxText-style) for pjit/GSPMD distribution.
+
+Every parameter and activation is annotated with *logical* axis names
+("batch", "embed", "heads", ...); a per-run rules table maps logical axes to
+mesh axes.  GSPMD handles non-divisible cases (e.g. hymba's 25 heads over a
+16-way model axis) by padding, so the same model code runs on any mesh.
+
+The active (mesh, rules) pair is carried in a module-level context set by the
+launcher; when no context is active (unit tests on CPU) all annotations are
+no-ops, so model code never branches on distribution.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+LogicalAxes = Tuple[Optional[str], ...]
+Rules = Dict[str, Optional[Union[str, Tuple[str, ...]]]]
+
+
+# --- rule presets ------------------------------------------------------------
+
+def ddp_rules(multi_pod: bool = False) -> Rules:
+    """Pure data parallel (params replicated)."""
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {"batch": batch}
+
+
+def tp_fsdp_rules(multi_pod: bool = False) -> Rules:
+    """The production preset: DP over pod+data with FSDP param sharding over
+    'data', tensor parallel over 'model' for heads/mlp/vocab/experts."""
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "seq": None,
+        "embed": "data",          # FSDP: params sharded over data axis
+        "embed_act": None,        # activations keep embed replicated
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "expert": "model",
+        "vocab": "model",
+        "qkv": "model",
+        "layers": None,
+        "state": None,
+        "seq_model": None,        # set to "model" for context parallelism
+    }
+
+
+def cp_rules(multi_pod: bool = False) -> Rules:
+    """Long-context preset: shard sequence over the model axis too."""
+    r = tp_fsdp_rules(multi_pod)
+    r["seq_model"] = "model"
+    return r
+
+
+# --- context -----------------------------------------------------------------
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[Rules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Optional[Mesh], rules: Optional[Rules]):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active() -> bool:
+    return _CTX.mesh is not None and _CTX.rules is not None
+
+
+def spec_for(axes: Sequence[Optional[str]],
+             rules: Optional[Rules] = None) -> P:
+    """Logical axes -> PartitionSpec under the (active) rules."""
+    rules = rules if rules is not None else (_CTX.rules or {})
+    parts = []
+    used: set = set()
+
+    def resolve(name):
+        m = rules.get(name)
+        if m is None:
+            return None
+        ms = (m,) if isinstance(m, str) else tuple(m)
+        ms = tuple(a for a in ms if a not in used)
+        used.update(ms)
+        if not ms:
+            return None
+        return ms if len(ms) > 1 else ms[0]
+
+    for a in axes:
+        parts.append(None if a is None else resolve(a))
+    return P(*parts)
+
+
+def sharding_for(axes: Sequence[Optional[str]],
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[Rules] = None) -> Optional[NamedSharding]:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(axes, rules))
+
+
+def shard(x: Array, *axes: Optional[str]) -> Array:
+    """Annotate an activation with logical axes (no-op without a context)."""
+    if not active():
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, sharding_for(axes))
+
+
+def is_axes_leaf(x: Any) -> bool:
+    """Leaf predicate for logical-axes trees (tuples of names / None).
+
+    The empty tuple is a *container* (e.g. a stateless optimizer's state),
+    not an axes leaf — rank-0 leaves use None."""
+    return x is None or (isinstance(x, tuple) and len(x) > 0 and all(
+        a is None or isinstance(a, str) for a in x))
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = (entry,) if isinstance(entry, str) else entry
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def relax_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims whose size does not divide the mesh extent.
+
+    Explicit pjit in_shardings require exact divisibility (unlike internal
+    with_sharding_constraint hints, which GSPMD pads); e.g. mamba2's vocab
+    50280 cannot shard 16-way, so that dim falls back to replicated."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, parts):
+        if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            entry = None
+        out.append(entry)
+    return P(*out)
+
+
+def tree_shardings(param_axes: Any, mesh: Mesh, rules: Rules,
+                   like: Any = None) -> Any:
+    """Map a tree of logical-axes tuples to NamedShardings (for in_shardings
+    / checkpoint restore).  ``None`` leaves mean replicated.  When ``like``
+    (matching tree of arrays/ShapeDtypeStructs) is given, specs are relaxed
+    per-dim to satisfy pjit divisibility."""
+    def f(axes):
+        if axes is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, spec_for(axes, rules))
+
+    shardings = jax.tree_util.tree_map(f, param_axes, is_leaf=is_axes_leaf)
+    if like is None:
+        return shardings
+
+    def relax(s, l):
+        return NamedSharding(mesh, relax_spec(s.spec, l.shape, mesh))
+
+    return jax.tree_util.tree_map(relax, shardings, like)

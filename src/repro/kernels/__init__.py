@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the analog hot spots.
+
+noisy_mvm.py     - fused array read: matmul + on-chip Gaussian + bound clip,
+                   with physical array-split segment semantics.
+pulse_update.py  - fused update cycle: pulse-coincidence matmuls + device
+                   maps + cycle noise + conductance clip.
+flash_attention.py - fused attention forward (online softmax in VMEM) for
+                   the serving path; realises the roofline's
+                   'fused-attention projection' (EXPERIMENTS.md §Roofline).
+ops.py           - jit'd wrappers matching the tile API (auto-interpret on CPU).
+ref.py           - pure-jnp oracles (shared with the simulator's default path).
+"""

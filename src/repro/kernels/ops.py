@@ -1,0 +1,64 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These adapt the (config-carrying, arbitrary-batch-shape) tile API onto the
+2-D padded kernel interfaces, pick interpret mode automatically on CPU
+(the kernels execute in Python for correctness validation; TPU is the
+performance target), and fall back to the pure-jnp reference when a shape is
+too tiny to be worth launching a kernel for.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.device import DeviceMaps, RPUConfig
+from repro.kernels.noisy_mvm import noisy_mvm_pallas
+from repro.kernels.pulse_update import pulse_update_pallas
+from repro.utils import fastrng
+
+Array = jax.Array
+
+
+@functools.lru_cache(maxsize=1)
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def noisy_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
+              transpose: bool = False) -> Tuple[Array, Array]:
+    """Kernel-backed analog MVM with the tile API contract
+    (arbitrary leading batch dims; per-vector saturation flag)."""
+    r, c = w.shape
+    contraction = r if transpose else c
+    limit = cfg.max_array_rows if transpose else cfg.max_array_cols
+    n_seg = max(1, -(-contraction // limit))
+
+    batch_shape = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    sigma = cfg.read_noise if (cfg.noise_backward if transpose
+                               else cfg.noise_forward) else 0.0
+    seed = fastrng.key_to_seed(key)
+    y2d, satblk = noisy_mvm_pallas(
+        w, x2d, seed, sigma=float(sigma), alpha=float(cfg.out_bound),
+        n_seg=n_seg, transpose=transpose, interpret=_interpret_default())
+    sat = jnp.any(satblk > 0, axis=-1)
+    out_dim = c if transpose else r
+    return (y2d.reshape(*batch_shape, out_dim),
+            sat.reshape(batch_shape))
+
+
+def pulse_update_fused(w: Array, maps: DeviceMaps, streams_rows: Array,
+                       streams_cols: Array, key: Array,
+                       cfg: RPUConfig) -> Array:
+    """Kernel-backed update cycle; streams already sampled (..., BL, n)."""
+    m, n = w.shape
+    rows2 = streams_rows.reshape(-1, m)
+    cols2 = streams_cols.reshape(-1, n)
+    seed = fastrng.key_to_seed(key)
+    return pulse_update_pallas(
+        w, maps.dw_up, maps.dw_dn, maps.bound, rows2, cols2, seed,
+        ctoc=float(cfg.dw_min_ctoc), interpret=_interpret_default())

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+The analog-physics reference implementations live in ``repro.core`` (they
+*are* pure jnp and serve double duty as the simulator's default path); this
+module re-exports them under kernel-matching signatures so every kernel has
+a same-file-layout oracle, plus a standalone ``pulse_update_ref`` that mirrors
+``pulse_update_pallas``'s exact argument contract.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.device import DeviceMaps, RPUConfig
+from repro.core import tile as _tile
+from repro.core import update as _update
+from repro.utils import fastrng
+
+Array = jax.Array
+
+
+def noisy_mvm_ref(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
+                  transpose: bool = False) -> Tuple[Array, Array]:
+    """Oracle for ``noisy_mvm_pallas`` (same RNG counter layout)."""
+    return _tile.analog_mvm_reference(w, x, key, cfg, transpose=transpose)
+
+
+def pulse_update_ref(w: Array, dw_up: Array, dw_dn: Array, bound: Array,
+                     streams_rows: Array, streams_cols: Array,
+                     key: Array, ctoc: float) -> Array:
+    """Oracle for ``pulse_update_pallas``: counts via jnp einsum, aggregated
+    cycle-to-cycle noise, conductance-bound clip."""
+    count_up, count_dn = _update.coincidence_counts(
+        streams_rows, streams_cols)
+    dw = count_up * dw_up - count_dn * dw_dn
+    if ctoc > 0.0:
+        var = count_up * dw_up ** 2 + count_dn * dw_dn ** 2
+        xi = fastrng.normal(key, dw.shape, dtype=dw.dtype)
+        dw = dw + ctoc * jnp.sqrt(var) * xi
+    return jnp.clip(w + dw.astype(w.dtype), -bound, bound)

@@ -1,0 +1,420 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks the device count on first
+#   init).  These placeholder host devices exist ONLY for the dry-run; smoke
+#   tests and benchmarks see the single real CPU device.
+
+"""Multi-pod dry-run: AOT-lower + compile every (architecture x input-shape)
+cell on the production mesh and record memory / cost / collective analysis.
+
+Per cell:
+  * build abstract train state (ShapeDtypeStructs — no allocation),
+  * jit the cell's step (train_step / prefill / serve_step) with
+    ``in_shardings`` derived from the logical-axis rules,
+  * ``.lower(...)`` -> ``.compile()`` — any sharding mismatch, unsupported
+    collective or partitioning bug fails here,
+  * print ``compiled.memory_analysis()`` (proves the per-device footprint)
+    and ``compiled.cost_analysis()`` (FLOPs/bytes for the roofline),
+  * parse collective bytes from the compiled HLO (per-op-type totals),
+  * append everything to ``results/dryrun/<cell>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek_7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--rules cp]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import (ALL_SHAPES, ModelConfig, ShapeCell,
+                                cell_applicable, shape_by_name)
+from repro.distributed import sharding as shd
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.serve import engine
+from repro.train import lm
+
+RESULTS_DIR = os.path.join("results", "dryrun")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in the compiled HLO.
+
+    The result shape of a collective is what crosses the interconnect (the
+    per-shard operand for ag/rs; full payload for ar) — a standard proxy for
+    wire bytes per chip.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match "<name> = <shape...> <op>(" — ops appear as e.g.
+        # "all-reduce(", "all-gather-start(" etc.
+        for op in _COLLECTIVES:
+            if re.search(rf"= .*\b{op}(-start)?\(", s):
+                first = _SHAPE_RE.search(s.split("=", 1)[1])
+                if first:
+                    out[op] += _shape_bytes(first)
+                    out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def _input_axes(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    if cell.kind in ("train", "prefill"):
+        out: Dict[str, Any] = {"tokens": ("batch", None)}
+        if cfg.family == "vlm":
+            out["frontend_embeds"] = ("batch", None, "embed_act")
+        if cfg.family == "audio":
+            out["enc_embeds"] = ("batch", None, "embed_act")
+        return out
+    return {"tokens_t": ("batch", None), "cache": engine.cache_axes(cfg)}
+
+
+# --- hillclimb variants: named config/rules transforms -----------------------
+# Each entry: (cfg_transform(cfg) -> cfg, rules_transform(rules) -> rules).
+
+def _v_kv8(cfg):
+    return dataclasses.replace(cfg, kv_cache_quant=True)
+
+
+def _v_noremat(cfg):
+    return dataclasses.replace(cfg, remat=False)
+
+
+def _v_cap10(cfg):
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+
+
+def _r_nofsdp(rules):
+    r = dict(rules)
+    r["embed"] = None          # replicate params over data (pure DP)
+    return r
+
+
+def _r_seqpar(rules):
+    r = dict(rules)
+    r["seq"] = "model"         # Megatron-style sequence parallelism
+    return r
+
+
+def _v_bm2(cfg):
+    if cfg.analog is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, analog=dataclasses.replace(cfg.analog, bm_mode="two_phase"))
+
+
+def _v_bm2_noremat(cfg):
+    return _v_noremat(_v_bm2(cfg))
+
+
+def _v_moe_a2a(cfg):
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch="a2a"))
+
+
+def _v_moe_a2a_cap10(cfg):
+    return _v_moe_a2a(_v_cap10(cfg))
+
+
+def _v_rematdots(cfg):
+    return dataclasses.replace(cfg, remat_policy="dots")
+
+
+def _v_rematdots_a2a(cfg):
+    return _v_moe_a2a(_v_rematdots(cfg))
+
+
+VARIANTS = {
+    "kv8": (_v_kv8, None),
+    "noremat": (_v_noremat, None),
+    "cap10": (_v_cap10, None),
+    "nofsdp": (None, _r_nofsdp),
+    "seqpar": (None, _r_seqpar),
+    "kv8_nofsdp": (_v_kv8, _r_nofsdp),
+    "bm2": (_v_bm2, None),
+    "bm2_noremat": (_v_bm2_noremat, None),
+    "moe_a2a": (_v_moe_a2a, None),
+    "moe_a2a_cap10": (_v_moe_a2a_cap10, None),
+    "rematdots": (_v_rematdots, None),
+    "rematdots_a2a": (_v_rematdots_a2a, None),
+}
+
+
+def lower_cell(arch: str, cell: ShapeCell, *, multi_pod: bool = False,
+               rules_name: str = "tp_fsdp",
+               analog: bool = False, variant: str = "") -> Dict[str, Any]:
+    """Lower + compile one cell; returns the analysis record."""
+    cfg = registry.get_config(arch)
+    if analog:
+        from repro.core.device import rpu_nm_bm_um_bl1
+        cfg = dataclasses.replace(cfg, analog=rpu_nm_bm_um_bl1())
+    ok, why = cell_applicable(cfg, cell)
+    if not ok:
+        return {"arch": arch, "cell": cell.name, "status": "skipped",
+                "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = (shd.cp_rules(multi_pod) if rules_name == "cp"
+             else shd.tp_fsdp_rules(multi_pod))
+    if variant:
+        cfg_t, rules_t = VARIANTS[variant]
+        if cfg_t is not None:
+            cfg = cfg_t(cfg)
+        if rules_t is not None:
+            rules = rules_t(rules)
+    key = jax.random.key(0)
+    t0 = time.time()
+
+    with shd.use_sharding(mesh, rules):
+        in_axes_tree: Any
+        if cell.kind == "train":
+            params_s, opt_s, axes = lm.abstract_train_state(key, cfg)
+            step, _ = lm.make_train_step(cfg)
+            fn = step
+            args = (params_s, opt_s, S.input_specs(cfg, cell),
+                    jax.ShapeDtypeStruct((), jnp.uint32))
+            opt_axes = _opt_axes(opt_s, axes)
+            in_axes_tree = (axes, opt_axes, _input_axes(cfg, cell), None)
+            # train keys are jax PRNG keys in real runs; for lowering use a
+            # plain uint32 seed folded inside
+            fn = _train_with_seed(step)
+        elif cell.kind == "prefill":
+            params_s, axes = _abstract_params(key, cfg)
+            specs = S.input_specs(cfg, cell)
+
+            def fn(params, tokens, enc_embeds=None):
+                return engine.prefill(params, tokens, cfg,
+                                      max_seq=cell.seq_len,
+                                      enc_embeds=enc_embeds)
+            if cfg.family == "audio":
+                args = (params_s, specs["tokens"], specs["enc_embeds"])
+                in_axes_tree = (axes, ("batch", None),
+                                ("batch", None, "embed_act"))
+            else:
+                args = (params_s, specs["tokens"])
+                in_axes_tree = (axes, ("batch", None))
+        else:  # decode
+            params_s, axes = _abstract_params(key, cfg)
+            specs = S.input_specs(cfg, cell)
+
+            def fn(params, tokens_t, cache):
+                return engine.serve_step(params, tokens_t, cache, cfg)
+            args = (params_s, specs["tokens_t"], specs["cache"])
+            in_axes_tree = (axes, ("batch", None), engine.cache_axes(cfg))
+
+        in_shardings = shd.tree_shardings(in_axes_tree, mesh, rules,
+                                          like=args)
+        jitted = jax.jit(fn, in_shardings=in_shardings)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    from repro.launch import hlo_analysis
+    trip_aware = hlo_analysis.analyse_hlo(hlo)
+
+    n_chips = mesh.devices.size
+    record = {
+        "arch": arch, "cell": cell.name, "status": "ok",
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "multi_pod": multi_pod, "rules": rules_name, "analog": analog,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # raw XLA cost_analysis (scan bodies counted once — see §Roofline)
+        "flops": cost.get("flops", 0.0) if cost else None,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else None,
+        "collectives": coll,
+        # trip-count-aware per-chip totals (repro.launch.hlo_analysis)
+        "trip_aware": trip_aware,
+        "memory_analysis": _mem_record(mem),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "hlo_bytes": len(hlo),
+        "_hlo_text": hlo,     # popped by run_cell, stored gzipped alongside
+    }
+    return record
+
+
+def _mem_record(mem) -> Optional[Dict[str, float]]:
+    if mem is None:
+        return None
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out or {"repr": str(mem)}
+
+
+def _abstract_params(key, cfg: ModelConfig):
+    from repro.models import transformer
+    box = {}
+
+    def build(k):
+        p, a = transformer.init_lm(k, cfg)
+        box["axes"] = a
+        return p
+
+    params_shape = jax.eval_shape(build, key)
+    return params_shape, box["axes"]
+
+
+def _opt_axes(opt_state_shape, param_axes):
+    """Axes tree for the optimizer state (mirrors params; scalars None)."""
+    if isinstance(opt_state_shape, dict) and "mu" in opt_state_shape:
+        return {"mu": param_axes, "nu": param_axes, "count": None}
+    return jax.tree_util.tree_map(lambda x: None, opt_state_shape)
+
+
+def _train_with_seed(step):
+    def fn(params, opt_state, batch, seed):
+        key = jax.random.key(seed)
+        return step(params, opt_state, batch, key)
+    return fn
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             rules_name: str = "tp_fsdp", analog: bool = False,
+             variant: str = "", force: bool = False) -> Dict[str, Any]:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = ("_pod2" if multi_pod else "") + \
+        (f"_{rules_name}" if rules_name != "tp_fsdp" else "") + \
+        ("_analog" if analog else "") + \
+        (f"_{variant}" if variant else "")
+    path = os.path.join(RESULTS_DIR, f"{arch}__{shape_name}{suffix}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            rec = json.load(f)
+        print(f"[dryrun] cached {arch} x {shape_name}{suffix}: "
+              f"{rec['status']}")
+        return rec
+    cell = shape_by_name(shape_name)
+    print(f"[dryrun] {arch} x {shape_name}{suffix} ...", flush=True)
+    try:
+        rec = lower_cell(arch, cell, multi_pod=multi_pod,
+                         rules_name=rules_name, analog=analog,
+                         variant=variant)
+        rec["variant"] = variant
+        hlo_text = rec.pop("_hlo_text", None)
+        if hlo_text is not None:
+            import gzip
+            with gzip.open(path.replace(".json", ".hlo.txt.gz"), "wt") as f:
+                f.write(hlo_text)
+    except Exception as e:   # noqa: BLE001 - recorded, rerun after fix
+        rec = {"arch": arch, "cell": shape_name, "status": "error",
+               "multi_pod": multi_pod, "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-3000:]}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        extra = (f" flops={rec['flops']:.3e} "
+                 f"coll={rec['collectives']['total']:.3e}B "
+                 f"compile={rec['compile_s']}s")
+    print(f"[dryrun] {arch} x {shape_name}{suffix}: {status}{extra}",
+          flush=True)
+    return rec
+
+
+def reanalyse_all():
+    """Re-run the trip-aware HLO analysis over stored .hlo.txt.gz artifacts
+    (accounting improvements without recompiling)."""
+    import glob
+    import gzip
+    from repro.launch import hlo_analysis
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        hpath = path.replace(".json", ".hlo.txt.gz")
+        if not os.path.exists(hpath):
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        with gzip.open(hpath, "rt") as f:
+            hlo = f.read()
+        rec["trip_aware"] = hlo_analysis.analyse_hlo(hlo)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[reanalyse] {os.path.basename(path)}: "
+              f"flops={rec['trip_aware']['dot_flops']:.3e} "
+              f"bytes={rec['trip_aware']['bytes_traffic']:.3e} "
+              f"coll={rec['trip_aware']['coll_total']:.3e}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="")
+    ap.add_argument("--shape", type=str, default="")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--rules", type=str, default="tp_fsdp")
+    ap.add_argument("--analog", action="store_true")
+    ap.add_argument("--variant", type=str, default="")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--reanalyse", action="store_true")
+    args = ap.parse_args()
+
+    if args.reanalyse:
+        reanalyse_all()
+        return
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        for mp in meshes:
+            for arch in registry.ARCH_IDS:
+                for cell in ALL_SHAPES:
+                    run_cell(arch, cell.name, multi_pod=mp,
+                             rules_name=args.rules, analog=args.analog,
+                             variant=args.variant, force=args.force)
+    else:
+        for mp in meshes:
+            run_cell(args.arch, args.shape, multi_pod=mp,
+                     rules_name=args.rules, analog=args.analog,
+                     variant=args.variant, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Input specifications per (architecture x shape cell).
+
+``input_specs``  returns weak-type-correct ``ShapeDtypeStruct`` stand-ins for
+every model input of that cell (no device allocation) — consumed by the
+multi-pod dry-run.  ``concrete_inputs`` materialises small real arrays with
+the same structure for smoke tests / examples.
+
+Sequence budgets per family (DESIGN.md §4):
+  vlm    : frontend patch tokens + text tokens sum to the cell's seq_len
+  audio  : encoder frames take 3/4 of the budget, decoder text 1/4
+  others : tokens = full seq_len
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.serve import engine
+
+Array = jax.Array
+SDS = jax.ShapeDtypeStruct
+
+
+def _token_split(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Tuple]:
+    """Shapes of the raw inputs for a full-sequence (train/prefill) cell."""
+    b, s = cell.global_batch, cell.seq_len
+    d = cfg.d_model
+    if cfg.family == "vlm":
+        p = min(cfg.frontend_tokens, s // 4)
+        return {"tokens": (b, s - p), "frontend_embeds": (b, p, d)}
+    if cfg.family == "audio":
+        s_src = (s * 3) // 4
+        return {"tokens": (b, s - s_src), "enc_embeds": (b, s_src, d)}
+    return {"tokens": (b, s)}
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct inputs for the cell's step function."""
+    if cell.kind in ("train", "prefill"):
+        shapes = _token_split(cfg, cell)
+        out: Dict[str, Any] = {
+            "tokens": SDS(shapes["tokens"], jnp.int32)}
+        if "frontend_embeds" in shapes:
+            out["frontend_embeds"] = SDS(shapes["frontend_embeds"],
+                                         cfg.act_dtype)
+        if "enc_embeds" in shapes:
+            out["enc_embeds"] = SDS(shapes["enc_embeds"], cfg.act_dtype)
+        return out
+
+    assert cell.kind == "decode"
+    b = cell.global_batch
+    src_len = (cell.seq_len * 3) // 4 if cfg.family == "audio" else 0
+    cache = jax.eval_shape(
+        lambda: engine.init_cache(cfg, b, cell.seq_len, src_len=src_len))
+    return {"tokens_t": SDS((b, 1), jnp.int32), "cache": cache}
+
+
+def concrete_inputs(cfg: ModelConfig, cell: ShapeCell, seed: int = 0
+                    ) -> Dict[str, Any]:
+    """Real (host-generated) inputs matching ``input_specs`` shapes."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, cell)
+
+    def realise(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.asarray(
+                rng.integers(0, min(cfg.vocab, 255), s.shape), s.dtype)
+        return jnp.asarray(rng.normal(0, 0.5, s.shape), s.dtype)
+
+    return jax.tree_util.tree_map(realise, specs)

@@ -1,0 +1,114 @@
+"""Shared model layers (pure-pytree, no framework deps).
+
+Convention: every ``init_*`` returns ``(params, axes)`` — two trees of
+identical structure, where ``axes`` leaves are tuples of *logical* axis names
+consumed by ``repro.distributed.sharding`` (NamedSharding for params,
+with_sharding_constraint for activations).  ``apply_*`` functions are pure.
+
+When a :class:`repro.core.device.RPUConfig` is attached to the model config,
+``dense_apply`` routes the projection through the analog tile layer — the
+paper's technique as a first-class substrate for every architecture
+(DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def truncated_normal_init(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+# --- dense -------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, axes: Tuple[str, str],
+               dtype, scale: Optional[float] = None,
+               analog=None) -> Tuple[Params, Params]:
+    """Weight (d_in, d_out) with logical axes; optional analog tile state."""
+    scale = scale if scale is not None else d_in ** -0.5
+    if analog is not None:
+        from repro.core import analog_linear
+        acfg = dataclasses.replace(analog, dtype=jnp.float32,
+                                   seeded_maps=True)
+        w_init = truncated_normal_init(key, (d_out, d_in), scale, jnp.float32)
+        st = analog_linear.init(key, d_in, d_out, acfg, bias=False,
+                                w_init=w_init)
+        # physical tile layout is (out, in): transpose the logical axes
+        return ({"w": st.w, "seed": st.seed},
+                {"w": (axes[1], axes[0]), "seed": None})
+    w = truncated_normal_init(key, (d_in, d_out), scale, dtype)
+    return {"w": w}, {"w": axes}
+
+
+def dense_apply(p: Params, x: Array, *, analog=None, key=None,
+                lr=1.0) -> Array:
+    if "seed" in p:   # analog tile
+        from repro.core import analog_linear
+        from repro.core.tile import TileState
+        acfg = dataclasses.replace(analog, dtype=jnp.float32,
+                                   seeded_maps=True)
+        st = TileState(w=p["w"], maps=None, seed=p["seed"])
+        return analog_linear.apply(st, x.astype(jnp.float32), key, acfg,
+                                   lr, bias=False).astype(x.dtype)
+    return jnp.einsum("...d,df->...f", x, p["w"].astype(x.dtype))
+
+
+# --- norms -------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Tuple[Params, Params]:
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": ("embed_act",)}
+
+
+def rmsnorm_apply(p: Params, x: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --- rotary position embedding -------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, D) or (..., S, D); positions: broadcastable (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = (1.0 / theta) ** (np.arange(0, half, dtype=np.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, half)
+    if x.ndim == ang.ndim + 1:                                # head axis
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- embeddings ---------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype) -> Tuple[Params, Params]:
+    # GPT-style 0.02 scale: keeps tied-unembedding logits O(1) at init
+    t = truncated_normal_init(key, (vocab, d), 0.02, dtype)
+    return {"table": t}, {"table": ("vocab", "embed")}
+
+
+def embed_apply(p: Params, tokens: Array) -> Array:
+    out = jnp.take(p["table"], tokens, axis=0)
+    return shard(out, "batch", "seq", "embed_act")
+
+
+def unembed_apply(p: Params, x: Array) -> Array:
+    """Logits via the (possibly tied) embedding table."""
+    logits = jnp.einsum("...d,vd->...v", x, p["table"].astype(x.dtype))
+    return shard(logits, "batch", "seq", "vocab")

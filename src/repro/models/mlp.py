@@ -1,0 +1,41 @@
+"""SwiGLU MLP block (dense FFN of every assigned arch)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+def init(key, cfg: ModelConfig, d_ff: int = 0):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    an = cfg.analog
+    p: Dict[str, Any] = {}
+    a: Dict[str, Any] = {}
+    p["wi"], a["wi"] = L.dense_init(ks[0], d, f, ("embed", "mlp"),
+                                    cfg.param_dtype, analog=an)
+    p["wg"], a["wg"] = L.dense_init(ks[1], d, f, ("embed", "mlp"),
+                                    cfg.param_dtype, analog=an)
+    p["wo"], a["wo"] = L.dense_init(ks[2], f, d, ("mlp", "embed"),
+                                    cfg.param_dtype, analog=an)
+    return p, a
+
+
+def apply(p, x: Array, cfg: ModelConfig, akey=None) -> Array:
+    def dense(name, xx, i):
+        k = None if akey is None else jax.random.fold_in(akey, i)
+        return L.dense_apply(p[name], xx, analog=cfg.analog, key=k)
+
+    h = jax.nn.silu(dense("wg", x, 0)) * dense("wi", x, 1)
+    h = shard(h, "batch", "seq", "mlp")
+    y = dense("wo", h, 2)
+    return shard(y, "batch", "seq", "embed_act")

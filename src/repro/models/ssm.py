@@ -1,0 +1,199 @@
+"""Mamba-2 SSD (state-space duality) block — mamba2-130m and the SSM branch
+of hymba-1.5b.
+
+The selective state space recurrence per head (state size N, head dim P):
+
+    h_t = a_t * h_{t-1} + dt_t * (B_t (x) x_t)        a_t = exp(dt_t * A)
+    y_t = C_t . h_t + D * x_t
+
+computed with the *chunked* SSD algorithm (arXiv:2405.21060): the sequence is
+split into chunks of Q tokens; within a chunk the contribution is a masked
+(C B^T ⊙ decay) x matmul (MXU-friendly, quadratic only in Q), and a single
+state tensor (B, H, P, N) is carried across chunks through ``lax.scan`` —
+O(S) total work, O(1) decode state.  All recurrence math runs in f32.
+
+The paper's (RPU) technique applies to the in/out projections of this block
+(they are plain MVMs -> analog tiles); the recurrence itself has no weight
+matrix and stays digital (DESIGN.md §4 inapplicability note).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.d_head
+    return d_in, n_heads, s.d_head, s.d_state
+
+
+def init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, h, p_dim, n = dims(cfg)
+    ks = jax.random.split(key, 6)
+    an = cfg.analog
+
+    params: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    # fused input projection: [z, x, B, C, dt]
+    d_proj = 2 * d_in + 2 * n + h
+    params["in_proj"], axes["in_proj"] = L.dense_init(
+        ks[0], d, d_proj, ("embed", "mlp"), cfg.param_dtype, analog=an)
+    params["out_proj"], axes["out_proj"] = L.dense_init(
+        ks[1], d_in, d, ("mlp", "embed"), cfg.param_dtype, analog=an)
+    # depthwise causal conv over [x, B, C]
+    conv_ch = d_in + 2 * n
+    params["conv_w"] = L.truncated_normal_init(
+        ks[2], (s.d_conv, conv_ch), conv_ch ** -0.5, cfg.param_dtype)
+    axes["conv_w"] = (None, "mlp")
+    params["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32))
+    axes["A_log"] = (None,)
+    params["D"] = jnp.ones((h,), jnp.float32)
+    axes["D"] = (None,)
+    params["dt_bias"] = jnp.zeros((h,), jnp.float32)
+    axes["dt_bias"] = (None,)
+    params["norm"], axes["norm"] = L.rmsnorm_init(d_in, cfg.param_dtype)
+    return params, axes
+
+
+def _split_proj(proj: Array, cfg: ModelConfig):
+    d_in, h, p_dim, n = dims(cfg)
+    z, xs, b, c, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return z, xs, b, c, dt
+
+
+def _causal_conv(x: Array, w: Array, state: Optional[Array] = None):
+    """Depthwise causal conv; x (B,S,C), w (K,C).  Returns (y, new_state)
+    where state carries the last K-1 inputs for decode."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+    return y, xp[:, -(k - 1):, :]
+
+
+def _ssd_chunked(xh: Array, dt: Array, a_log: Array, b: Array, c: Array,
+                 d_skip: Array, chunk: int,
+                 state0: Optional[Array] = None):
+    """Chunked SSD scan.
+
+    xh (B,S,H,P), dt (B,S,H) [post-softplus], b/c (B,S,N), d_skip (H,).
+    Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    bsz, s, h, p_dim = xh.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    s_pad = -(-s // q) * q
+    pad = s_pad - s
+
+    def padt(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+
+    xh_, dt_, b_, c_ = map(padt, (xh.astype(jnp.float32),
+                                  dt.astype(jnp.float32),
+                                  b.astype(jnp.float32),
+                                  c.astype(jnp.float32)))
+    nc = s_pad // q
+    xh_ = xh_.reshape(bsz, nc, q, h, p_dim).transpose(1, 0, 2, 3, 4)
+    dt_ = dt_.reshape(bsz, nc, q, h).transpose(1, 0, 2, 3)
+    b_ = b_.reshape(bsz, nc, q, n).transpose(1, 0, 2, 3)
+    c_ = c_.reshape(bsz, nc, q, n).transpose(1, 0, 2, 3)
+
+    a = -jnp.exp(a_log)                                    # (H,) negative
+
+    def chunk_step(state, inp):
+        xc, dtc, bc, cc = inp                              # per-chunk blocks
+        log_a = dtc * a[None, None, :]                     # (B,Q,H) <= 0
+        cum = jnp.cumsum(log_a, axis=1)                    # inclusive
+        total = cum[:, -1]                                 # (B,H)
+        # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) dt_j (C_i.B_j) x_j
+        # mask the exponent BEFORE exp: exp of a masked +large value is inf
+        # and 0*inf => NaN in the backward pass (classic where-grad trap)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]       # (B,Qi,Qj,H)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        decay = jnp.exp(jnp.where(mask[None, :, :, None], diff, -1e30))
+        cb = jnp.einsum("bin,bjn->bij", cc, bc)            # (B,Qi,Qj)
+        w_ij = cb[..., None] * decay * dtc[:, None, :, :]  # (B,Qi,Qj,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w_ij, xc)
+        # inter-chunk: y_i += (C_i . state) * exp(cum_i)
+        y_inter = jnp.einsum("bin,bhpn->bihp", cc, state) \
+            * jnp.exp(cum)[:, :, :, None]
+        # state update: state = exp(total) * state + sum_j exp(total-cum_j)
+        #                                            dt_j (x_j (x) B_j)
+        w_j = jnp.exp(total[:, None, :] - cum) * dtc       # (B,Q,H)
+        ds = jnp.einsum("bjh,bjhp,bjn->bhpn", w_j, xc, bc)
+        state = jnp.exp(total)[:, :, None, None] * state + ds
+        return state, y_intra + y_inter
+
+    state0 = (jnp.zeros((bsz, h, p_dim, n), jnp.float32)
+              if state0 is None else state0.astype(jnp.float32))
+    state, ys = jax.lax.scan(chunk_step, state0, (xh_, dt_, b_, c_))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s_pad, h, p_dim)[:, :s]
+    y = y + d_skip[None, None, :, None] * xh.astype(jnp.float32)
+    return y, state
+
+
+def forward(p, x: Array, cfg: ModelConfig, akey=None,
+            state: Optional[Dict[str, Array]] = None,
+            return_state: bool = False):
+    """Full-sequence SSD forward.  x (B,S,d) -> (B,S,d)."""
+    d_in, h, p_dim, n = dims(cfg)
+    k = None if akey is None else jax.random.fold_in(akey, 0)
+    proj = L.dense_apply(p["in_proj"], x, analog=cfg.analog, key=k)
+    z, xs, b, c, dt = _split_proj(proj, cfg)
+
+    xbc = jnp.concatenate([xs, b, c], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(xbc.dtype),
+                                 conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, b, c = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    xh = xs.reshape(*xs.shape[:-1], h, p_dim)
+    ssm_state = None if state is None else state["ssm"]
+    y, new_state = _ssd_chunked(xh, dt, p["A_log"], b, c, p["D"],
+                                cfg.ssm.chunk, ssm_state)
+    y = y.reshape(*x.shape[:-1], d_in).astype(x.dtype)
+    y = L.rmsnorm_apply(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    k2 = None if akey is None else jax.random.fold_in(akey, 1)
+    out = L.dense_apply(p["out_proj"], y, analog=cfg.analog, key=k2)
+    out = shard(out, "batch", "seq", "embed_act")
+    if return_state:
+        return out, {"conv": new_conv, "ssm": new_state}
+    return out
+
+
+def decode(p, x_t: Array, state: Dict[str, Array], cfg: ModelConfig,
+           akey=None):
+    """Single-token recurrent step; state {conv (B,K-1,C), ssm (B,H,P,N)}."""
+    y, new_state = forward(p, x_t, cfg, akey=akey, state=state,
+                           return_state=True)
+    return y, new_state
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    d_in, h, p_dim, n = dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, conv_ch),
+                          cfg.act_dtype),
+        "ssm": jnp.zeros((batch, h, p_dim, n), jnp.float32),
+    }

@@ -1,0 +1,356 @@
+"""Composable decoder / encoder-decoder stacks for all assigned families.
+
+One scan-over-layers stack (stacked parameters, O(1) HLO in depth — an
+80-layer qwen-110b compiles as one block) assembled per family:
+
+  dense / vlm / audio-decoder : [attn + SwiGLU]
+  moe                         : [attn + MoE]
+  ssm                         : [SSD]                    (mamba2: no attn/MLP)
+  hybrid                      : [attn || SSD  + SwiGLU]  (hymba parallel heads)
+  audio (enc-dec)             : encoder [bi-attn + MLP] + decoder
+                                [self-attn + cross-attn + MLP]
+
+Pre-norm residual blocks, RMSNorm, RoPE, optional remat per block.
+Analog (RPU) mode threads a per-layer PRNG key through every projection.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import attention, layers as L, mlp, moe, ssm
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Layer block (one transformer layer, family-dispatched)
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, *, cross: bool = False):
+    ks = jax.random.split(key, 8)
+    p: Params = {}
+    a: Params = {}
+    fam = cfg.family
+    if fam != "ssm":
+        p["ln_attn"], a["ln_attn"] = L.rmsnorm_init(cfg.d_model,
+                                                    cfg.param_dtype)
+        p["attn"], a["attn"] = attention.init(ks[0], cfg)
+    if cross:
+        p["ln_cross"], a["ln_cross"] = L.rmsnorm_init(cfg.d_model,
+                                                      cfg.param_dtype)
+        p["cross"], a["cross"] = attention.init(ks[1], cfg, cross=True)
+    if fam in ("ssm", "hybrid"):
+        p["ln_ssm"], a["ln_ssm"] = L.rmsnorm_init(cfg.d_model,
+                                                  cfg.param_dtype)
+        p["ssm"], a["ssm"] = ssm.init(ks[2], cfg)
+    if fam == "moe":
+        p["ln_ffn"], a["ln_ffn"] = L.rmsnorm_init(cfg.d_model,
+                                                  cfg.param_dtype)
+        p["moe"], a["moe"] = moe.init(ks[3], cfg)
+    elif fam != "ssm":
+        p["ln_ffn"], a["ln_ffn"] = L.rmsnorm_init(cfg.d_model,
+                                                  cfg.param_dtype)
+        p["mlp"], a["mlp"] = mlp.init(ks[3], cfg)
+    return p, a
+
+
+def _block_apply(p, x: Array, cfg: ModelConfig, *, positions, causal=True,
+                 enc_out=None, akey=None):
+    """Full-sequence block.  Returns (y, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+    if fam == "ssm":
+        h = L.rmsnorm_apply(p["ln_ssm"], x, cfg.norm_eps)
+        x = x + ssm.forward(p["ssm"], h, cfg, akey=akey)
+        return x, aux
+
+    h = L.rmsnorm_apply(p["ln_attn"], x, cfg.norm_eps)
+    att = attention.forward(p["attn"], h, cfg, positions=positions,
+                            causal=causal, akey=akey)
+    if fam == "hybrid":
+        hs = L.rmsnorm_apply(p["ln_ssm"], x, cfg.norm_eps)
+        sout = ssm.forward(p["ssm"], hs, cfg, akey=None if akey is None
+                           else jax.random.fold_in(akey, 101))
+        att = 0.5 * (att + sout)          # hymba: parallel heads, averaged
+    x = x + att
+
+    if enc_out is not None:
+        h = L.rmsnorm_apply(p["ln_cross"], x, cfg.norm_eps)
+        x = x + attention.forward(
+            p["cross"], h, cfg, positions=positions, causal=False,
+            x_kv=enc_out, akey=None if akey is None
+            else jax.random.fold_in(akey, 102))
+
+    h = L.rmsnorm_apply(p["ln_ffn"], x, cfg.norm_eps)
+    if fam == "moe":
+        y, aux = moe.apply(p["moe"], h, cfg, akey=akey)
+    else:
+        y = mlp.apply(p["mlp"], h, cfg, akey=akey)
+    return x + y, aux
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def _stacked_init(key, n: int, fn):
+    """vmap layer init over n keys -> stacked params (leading 'layers' dim)."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: fn(k)[0])(keys)
+    _, axes = fn(key)  # single-layer axes (static metadata)
+    axes = jax.tree_util.tree_map(
+        lambda ax: ("layers",) + tuple(ax) if isinstance(ax, tuple)
+        else ("layers",), axes,
+        is_leaf=lambda x: x is None or (isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x)))
+    return params, axes
+
+
+def init_lm(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 6)
+    p: Params = {}
+    a: Params = {}
+    p["embed"], a["embed"] = L.embed_init(ks[0], cfg.vocab, cfg.d_model,
+                                          cfg.param_dtype)
+    cross = cfg.encoder_layers > 0
+    p["layers"], a["layers"] = _stacked_init(
+        ks[1], cfg.n_layers,
+        lambda k: _block_init(k, cfg, cross=cross))
+    if cross:
+        p["enc_layers"], a["enc_layers"] = _stacked_init(
+            ks[2], cfg.encoder_layers, lambda k: _block_init(k, cfg))
+        p["enc_norm"], a["enc_norm"] = L.rmsnorm_init(cfg.d_model,
+                                                      cfg.param_dtype)
+    if cfg.frontend != "none":
+        p["adapter"], a["adapter"] = L.dense_init(
+            ks[3], cfg.d_model, cfg.d_model, ("embed", "embed_act"),
+            cfg.param_dtype)
+    p["final_norm"], a["final_norm"] = L.rmsnorm_init(cfg.d_model,
+                                                      cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        p["unembed"], a["unembed"] = L.dense_init(
+            ks[4], cfg.d_model, cfg.vocab, ("embed", "vocab"),
+            cfg.param_dtype)
+    return p, a
+
+
+def _remat(body, cfg: ModelConfig):
+    """Apply the configured activation-checkpoint policy to a scan body.
+
+    'full'  — recompute everything in the backward (lowest memory, +1 fwd);
+    'dots'  — Megatron-style selective: save matmul outputs (projections),
+              recompute attention internals / elementwise (keeps flash
+              attention O(S) in the backward without a full forward replay).
+    """
+    if not cfg.remat:
+        return body
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+
+def _scan_layers(stacked_params, x, cfg: ModelConfig, *, positions,
+                 causal=True, enc_out=None, akey=None):
+    n = cfg.n_layers if stacked_params is not None else 0
+
+    def body(carry, inp):
+        xx, aux = carry
+        layer_p, li = inp
+        lk = None if akey is None else jax.random.fold_in(akey, li)
+        yy, a = _block_apply(layer_p, xx, cfg, positions=positions,
+                             causal=causal, enc_out=enc_out, akey=lk)
+        return (yy, aux + a), None
+
+    body = _remat(body, cfg)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (stacked_params, jnp.arange(jax.tree_util.tree_leaves(
+            stacked_params)[0].shape[0])))
+    return x, aux
+
+
+def forward(params: Params, tokens: Array, cfg: ModelConfig, *,
+            frontend_embeds: Optional[Array] = None,
+            enc_embeds: Optional[Array] = None,
+            akey=None) -> Tuple[Array, Array]:
+    """Training forward -> (logits, aux_loss).
+
+    tokens: (B, S_text).  ``frontend_embeds`` (B, P, d) are prepended to the
+    text sequence (vlm); ``enc_embeds`` (B, S_src, d) feed the encoder
+    (audio enc-dec).
+    """
+    x = L.embed_apply(params["embed"], tokens)
+    if frontend_embeds is not None:
+        fe = L.dense_apply(params["adapter"],
+                           frontend_embeds.astype(x.dtype))
+        x = jnp.concatenate([fe, x], axis=1)
+
+    enc_out = None
+    if cfg.encoder_layers > 0:
+        assert enc_embeds is not None
+        e = L.dense_apply(params["adapter"], enc_embeds.astype(x.dtype)) \
+            if "adapter" in params else enc_embeds.astype(x.dtype)
+        e_pos = jnp.arange(e.shape[1])[None]
+        enc_cfg = cfg
+        e, _ = _scan_layers_enc(params["enc_layers"], e, enc_cfg,
+                                positions=e_pos, akey=akey)
+        enc_out = L.rmsnorm_apply(params["enc_norm"], e, cfg.norm_eps)
+
+    positions = jnp.arange(x.shape[1])[None]
+    x = shard(x, "batch", "seq", "embed_act")
+    x, aux = _scan_layers(params["layers"], x, cfg, positions=positions,
+                          causal=True, enc_out=enc_out, akey=akey)
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if frontend_embeds is not None:
+        x = x[:, frontend_embeds.shape[1]:]   # predict text positions only
+    if cfg.tie_embeddings:
+        logits = L.unembed_apply(params["embed"], x)
+    else:
+        logits = L.dense_apply(params["unembed"], x)
+        logits = shard(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode blocks (KV-cache and SSM-state plumbing)
+# ---------------------------------------------------------------------------
+
+def _ring_cache_from_full(k: Array, window: int) -> Array:
+    """Arrange the last `window` keys of (B,S,H,D) into ring-slot order."""
+    s = k.shape[1]
+    if s <= window:
+        pad = window - s
+        return jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    idx = jnp.arange(s - window, s)
+    out = jnp.zeros((k.shape[0], window, *k.shape[2:]), k.dtype)
+    return out.at[:, idx % window].set(k[:, idx])
+
+
+def block_prefill(p, x: Array, cfg: ModelConfig, *, positions,
+                  cache_len: int, enc_out=None, akey=None):
+    """Full-sequence block that also emits its decode cache."""
+    cache: Dict[str, Array] = {}
+    aux = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam != "ssm":
+        h = L.rmsnorm_apply(p["ln_attn"], x, cfg.norm_eps)
+        att, (kk, vv) = attention.forward(
+            p["attn"], h, cfg, positions=positions, causal=True, akey=akey,
+            return_kv=True)
+        if cfg.kv_cache_quant:
+            kk = attention.quantize_kv(kk)
+            vv = attention.quantize_kv(vv)
+        if cfg.swa_window > 0:
+            w = min(cfg.swa_window, cache_len)
+            cache["k"] = _ring_cache_from_full(kk, w)
+            cache["v"] = _ring_cache_from_full(vv, w)
+        else:
+            pad = cache_len - kk.shape[1]
+            cache["k"] = jnp.pad(kk, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cache["v"] = jnp.pad(vv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if fam in ("ssm", "hybrid"):
+        hs = L.rmsnorm_apply(p["ln_ssm"], x, cfg.norm_eps)
+        sout, sstate = ssm.forward(p["ssm"], hs, cfg, akey=akey,
+                                   return_state=True)
+        cache["ssm_conv"] = sstate["conv"]
+        cache["ssm_state"] = sstate["ssm"]
+    if fam == "ssm":
+        return x + sout, aux, cache
+
+    if fam == "hybrid":
+        att = 0.5 * (att + sout)
+    x = x + att
+
+    if enc_out is not None:
+        # static cross-attention memory (projected once at prefill)
+        hq = L.rmsnorm_apply(p["ln_cross"], x, cfg.norm_eps)
+        y_cross, (ck, cv) = attention.forward(
+            p["cross"], hq, cfg, positions=positions, causal=False,
+            x_kv=enc_out, akey=None if akey is None
+            else jax.random.fold_in(akey, 102), return_kv=True)
+        x = x + y_cross
+        cache["cross_k"] = ck
+        cache["cross_v"] = cv
+
+    h = L.rmsnorm_apply(p["ln_ffn"], x, cfg.norm_eps)
+    if fam == "moe":
+        y, aux = moe.apply(p["moe"], h, cfg, akey=akey)
+    else:
+        y = mlp.apply(p["mlp"], h, cfg, akey=akey)
+    return x + y, aux, cache
+
+
+def block_decode(p, x_t: Array, cache: Dict[str, Array], pos: Array,
+                 cfg: ModelConfig, akey=None):
+    """Single-token block step; returns (y_t, new_cache)."""
+    fam = cfg.family
+    new_cache = dict(cache)
+
+    if fam == "ssm":
+        h = L.rmsnorm_apply(p["ln_ssm"], x_t, cfg.norm_eps)
+        sout, st = ssm.decode(
+            p["ssm"], h,
+            {"conv": cache["ssm_conv"], "ssm": cache["ssm_state"]},
+            cfg, akey=akey)
+        new_cache["ssm_conv"] = st["conv"]
+        new_cache["ssm_state"] = st["ssm"]
+        return x_t + sout, new_cache
+
+    h = L.rmsnorm_apply(p["ln_attn"], x_t, cfg.norm_eps)
+    att, nk, nv = attention.decode(p["attn"], h, cache["k"], cache["v"],
+                                   pos, cfg, akey=akey)
+    new_cache["k"], new_cache["v"] = nk, nv
+    if fam == "hybrid":
+        hs = L.rmsnorm_apply(p["ln_ssm"], x_t, cfg.norm_eps)
+        sout, st = ssm.decode(
+            p["ssm"], hs,
+            {"conv": cache["ssm_conv"], "ssm": cache["ssm_state"]},
+            cfg, akey=None if akey is None
+            else jax.random.fold_in(akey, 101))
+        new_cache["ssm_conv"] = st["conv"]
+        new_cache["ssm_state"] = st["ssm"]
+        att = 0.5 * (att + sout)
+    x_t = x_t + att
+
+    if "cross_k" in cache:
+        hq = L.rmsnorm_apply(p["ln_cross"], x_t, cfg.norm_eps)
+        yc, _, _ = attention.decode(
+            p["cross"], hq, cache["cross_k"], cache["cross_v"], pos, cfg,
+            cross=True, akey=None if akey is None
+            else jax.random.fold_in(akey, 102))
+        x_t = x_t + yc
+
+    h = L.rmsnorm_apply(p["ln_ffn"], x_t, cfg.norm_eps)
+    if fam == "moe":
+        y, _ = moe.apply(p["moe"], h, cfg, akey=akey)
+    else:
+        y = mlp.apply(p["mlp"], h, cfg, akey=akey)
+    return x_t + y, new_cache
+
+
+def _scan_layers_enc(stacked_params, x, cfg, *, positions, akey=None):
+    def body(carry, inp):
+        xx, aux = carry
+        layer_p, li = inp
+        lk = None if akey is None else jax.random.fold_in(akey, 1000 + li)
+        yy, a = _block_apply(layer_p, xx, cfg, positions=positions,
+                             causal=False, akey=lk)
+        return (yy, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    n = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (stacked_params, jnp.arange(n)))
+    return x, aux

@@ -1,0 +1,18 @@
+"""Optimizers (pure-pytree, optax-style ``(init, update)`` pairs).
+
+``analog_sgd`` is the hardware-exact optimizer for analog mode: the analog
+layers' custom VJP already returns ``w_bar = w - w_physically_updated`` (the
+pulse update and bound clip happen *in the backward pass*), so the optimizer
+step is exactly ``w <- w - w_bar`` with no scaling, momentum or accumulation —
+anything else would break the physics.  Integer / float0 leaves (device seeds)
+are passed through untouched.
+
+Digital optimizers (``sgd``, ``momentum``, ``adamw``) serve the FP baselines
+and digital LM training; all are jit/shard-friendly pytrees.
+"""
+
+from repro.optim.optimizers import (  # noqa: F401
+    OptState, Optimizer, adamw, analog_sgd, momentum, sgd)
+from repro.optim.compression import (  # noqa: F401
+    compress_gradients, decompress_gradients, ef_int8_compressor,
+    topk_compressor)

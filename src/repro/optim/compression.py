@@ -1,0 +1,124 @@
+"""Gradient compression for data-parallel all-reduce (distributed-optimization
+trick; DESIGN.md §5).
+
+Two schemes, both with *error feedback* (the compression residual is added
+back into the next step's gradient so the compounded error stays bounded):
+
+* ``ef_int8``  — per-tensor symmetric int8 quantisation (4x wire reduction
+  vs f32, 2x vs bf16); scale = max|g|/127 communicated alongside.
+* ``topk``     — keep the largest-|g| fraction per tensor (sparsity k),
+  transmitted as (values, indices).
+
+Usage is purely functional: ``compress -> (payload, new_residual)``;
+``decompress(payload) -> dense grad``.  In the pjit data-parallel step the
+all-reduce happens on the *compressed payload* (int8 / sparse values), so the
+bytes crossing ICI shrink accordingly; tests validate the error-feedback
+convergence property (``tests/test_compression.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Int8Payload(NamedTuple):
+    q: jax.Array       # int8 quantised values
+    scale: jax.Array   # f32 scalar per tensor
+
+
+class TopKPayload(NamedTuple):
+    values: jax.Array   # f32 kept values (k,)
+    indices: jax.Array  # int32 flat indices (k,)
+    size: int           # static original size
+
+
+def _is_float(leaf) -> bool:
+    try:
+        return jnp.issubdtype(leaf.dtype, jnp.floating)
+    except Exception:
+        return False
+
+
+# --- int8 with error feedback -----------------------------------------------
+
+def ef_int8_compressor():
+    def compress(g: jax.Array, residual: jax.Array
+                 ) -> Tuple[Int8Payload, jax.Array]:
+        g = g.astype(jnp.float32) + residual
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return Int8Payload(q=q, scale=scale), g - deq
+
+    def decompress(p: Int8Payload) -> jax.Array:
+        return p.q.astype(jnp.float32) * p.scale
+
+    return compress, decompress
+
+
+# --- top-k with error feedback ----------------------------------------------
+
+def topk_compressor(fraction: float = 0.01):
+    def compress(g: jax.Array, residual: jax.Array
+                 ) -> Tuple[TopKPayload, jax.Array]:
+        g = g.astype(jnp.float32) + residual
+        flat = g.reshape(-1)
+        k = max(1, int(fraction * flat.size))
+        vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+        kept = flat[idx]
+        sparse_dense = jnp.zeros_like(flat).at[idx].set(kept)
+        payload = TopKPayload(values=kept, indices=idx.astype(jnp.int32),
+                              size=flat.size)
+        return payload, (flat - sparse_dense).reshape(g.shape)
+
+    def decompress(p: TopKPayload) -> jax.Array:
+        flat = jnp.zeros((p.size,), jnp.float32).at[p.indices].set(p.values)
+        return flat
+
+    return compress, decompress
+
+
+# --- pytree-level API --------------------------------------------------------
+
+def init_residuals(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32) if _is_float(p)
+        else jnp.zeros(()), params)
+
+
+def compress_gradients(grads: PyTree, residuals: PyTree, compressor
+                       ) -> Tuple[PyTree, PyTree]:
+    """Compress every float leaf; returns (payloads, new_residuals)."""
+    compress, _ = compressor
+
+    def c(g, r):
+        if g is None or not _is_float(g) or (
+                getattr(g, "dtype", None) == jax.dtypes.float0):
+            return (g, r)
+        return compress(g, r)
+
+    pairs = jax.tree_util.tree_map(c, grads, residuals)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and not isinstance(  # noqa: E731
+        x, (Int8Payload, TopKPayload))
+    payloads = jax.tree_util.tree_map(lambda pr: pr[0], pairs, is_leaf=is_pair)
+    new_res = jax.tree_util.tree_map(lambda pr: pr[1], pairs, is_leaf=is_pair)
+    return payloads, new_res
+
+
+def decompress_gradients(payloads: PyTree, shapes: PyTree, compressor
+                         ) -> PyTree:
+    """Inverse of :func:`compress_gradients` (shapes: matching param tree)."""
+    _, decompress = compressor
+
+    def d(payload, p):
+        if isinstance(payload, (Int8Payload, TopKPayload)):
+            return decompress(payload).reshape(p.shape).astype(p.dtype)
+        return payload
+
+    is_payload = lambda x: isinstance(x, (Int8Payload, TopKPayload))  # noqa: E731
+    return jax.tree_util.tree_map(d, payloads, shapes, is_leaf=is_payload)

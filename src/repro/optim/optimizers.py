@@ -1,0 +1,136 @@
+"""Minimal, shard-friendly optimizer implementations (no external deps).
+
+All state trees mirror the param tree 1:1 in *structure* (non-float leaves —
+e.g. analog-tile PRNG seeds — carry scalar zero sentinels) so that
+``jax.tree_util.tree_map`` over (params, grads, state...) never hits a
+structure mismatch, and sharding rules derived from the param tree transfer
+to the optimizer state unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+OptState = Any
+
+
+class Optimizer(NamedTuple):
+    """(init, update) pair.  ``update(grads, state, params) ->
+    (new_params, new_state)`` applies the step directly, keeping the training
+    loop uniform between analog and digital modes."""
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree], Tuple[PyTree, OptState]]
+
+
+def _is_float(leaf) -> bool:
+    try:
+        return jnp.issubdtype(leaf.dtype, jnp.floating)
+    except Exception:
+        return False
+
+
+def _is_float0(g) -> bool:
+    return getattr(g, "dtype", None) == jax.dtypes.float0
+
+
+def _skippable(p, g) -> bool:
+    return g is None or _is_float0(g) or not _is_float(p)
+
+
+def _zeros_like_or_sentinel(p):
+    return jnp.zeros(p.shape, jnp.float32) if _is_float(p) else jnp.zeros(())
+
+
+def analog_sgd() -> Optimizer:
+    """Hardware-exact step: ``w <- w - w_bar``.
+
+    The analog layers' custom VJP returns ``w_bar = w - w_physically_updated``
+    (pulse update + device bound clip happen in the backward pass, learning
+    rate enters through the pulse gains), so the only admissible optimizer
+    transformation is subtraction with factor 1 — momentum/accumulation would
+    break the hardware semantics.
+    """
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        def step(p, g):
+            return p if _skippable(p, g) else p - g
+        return jax.tree_util.tree_map(step, params, grads), state
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        def step(p, g):
+            return p if _skippable(p, g) else p - lr * g
+        return jax.tree_util.tree_map(step, params, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(_zeros_like_or_sentinel, params)
+
+    def update(grads, state, params):
+        def upd(p, g, m):
+            if _skippable(p, g):
+                return p, m
+            m = beta * m + g.astype(jnp.float32)
+            d = (g.astype(jnp.float32) + beta * m) if nesterov else m
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), m
+
+        pairs = jax.tree_util.tree_map(upd, params, grads, state)
+        new_params = jax.tree_util.tree_map(
+            lambda pr: pr[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree_util.tree_map(
+            lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    """AdamW with fp32 moments; step count carried as an int32 scalar."""
+
+    def init(params):
+        zeros = jax.tree_util.tree_map(_zeros_like_or_sentinel, params)
+        return {"mu": zeros,
+                "nu": jax.tree_util.tree_map(jnp.zeros_like, zeros),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+
+        def upd(p, g, m, v):
+            if _skippable(p, g):
+                return p, m, v
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            upd_ = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            upd_ = upd_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd_).astype(p.dtype), m, v
+
+        triples = jax.tree_util.tree_map(
+            upd, params, grads, state["mu"], state["nu"])
+        is_triple = lambda x: isinstance(x, tuple)  # noqa: E731
+        pick = lambda i: jax.tree_util.tree_map(  # noqa: E731
+            lambda tr: tr[i], triples, is_leaf=is_triple)
+        return pick(0), {"mu": pick(1), "nu": pick(2), "count": count}
+
+    return Optimizer(init, update)

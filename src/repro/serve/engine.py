@@ -1,0 +1,167 @@
+"""Serving engine: prefill + batched decode with per-layer caches.
+
+``prefill``  lowers the ``prefill_32k`` cells: full flash forward over the
+prompt while emitting every layer's decode cache (KV ring buffers for SWA,
+SSD states for ssm/hybrid, static cross-attention memory for enc-dec).
+
+``serve_step``  lowers the ``decode_32k`` / ``long_500k`` cells: one new
+token per sequence against the cache — a scan over layers whose carried
+activations are (B, 1, d), exactly the production batched-decode inner loop.
+
+Caches are plain pytrees stacked over layers (leading L axis), so they shard
+with the same logical rules as the parameters (kv_heads/model, batch/data).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Array = jax.Array
+
+
+def cache_len_for(cfg: ModelConfig, max_seq: int) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.swa_window > 0:
+        return min(cfg.swa_window, max_seq)
+    return max_seq
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               src_len: int = 0) -> Dict[str, Array]:
+    """Zero-initialised decode state (for dry-runs and fresh decode)."""
+    c: Dict[str, Array] = {}
+    hkv, hd, l = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    cl = cache_len_for(cfg, max_seq)
+    kv_dt = jnp.int8 if cfg.kv_cache_quant else cfg.act_dtype
+    if cfg.family != "ssm":
+        c["k"] = jnp.zeros((l, batch, cl, hkv, hd), kv_dt)
+        c["v"] = jnp.zeros((l, batch, cl, hkv, hd), kv_dt)
+    if cfg.family in ("ssm", "hybrid"):
+        from repro.models import ssm as S
+        d_in, h, p_dim, n = S.dims(cfg)
+        conv_ch = d_in + 2 * n
+        c["ssm_conv"] = jnp.zeros((l, batch, cfg.ssm.d_conv - 1, conv_ch),
+                                  cfg.act_dtype)
+        c["ssm_state"] = jnp.zeros((l, batch, h, p_dim, n), jnp.float32)
+    if cfg.encoder_layers > 0:
+        c["cross_k"] = jnp.zeros((l, batch, src_len, hkv, hd), cfg.act_dtype)
+        c["cross_v"] = jnp.zeros((l, batch, src_len, hkv, hd), cfg.act_dtype)
+    c["pos"] = jnp.zeros((batch,), jnp.int32)
+    return c
+
+
+def cache_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    """Logical-axes tree matching :func:`init_cache` (for shardings)."""
+    c: Dict[str, Any] = {}
+    if cfg.family != "ssm":
+        c["k"] = ("layers", "batch", "seq", "kv_heads", None)
+        c["v"] = ("layers", "batch", "seq", "kv_heads", None)
+    if cfg.family in ("ssm", "hybrid"):
+        c["ssm_conv"] = ("layers", "batch", None, "mlp")
+        c["ssm_state"] = ("layers", "batch", None, None, None)
+    if cfg.encoder_layers > 0:
+        c["cross_k"] = ("layers", "batch", "seq", "kv_heads", None)
+        c["cross_v"] = ("layers", "batch", "seq", "kv_heads", None)
+    c["pos"] = ("batch",)
+    return c
+
+
+def prefill(params, tokens: Array, cfg: ModelConfig, *, max_seq: int,
+            enc_embeds: Optional[Array] = None,
+            akey=None) -> Tuple[Array, Dict[str, Array]]:
+    """Process the prompt; returns (last-position logits, decode cache)."""
+    x = L.embed_apply(params["embed"], tokens)
+    enc_out = None
+    if cfg.encoder_layers > 0:
+        e = enc_embeds.astype(x.dtype)
+        if "adapter" in params:        # frontend adapter (as in forward())
+            e = L.dense_apply(params["adapter"], e)
+        e_pos = jnp.arange(e.shape[1])[None]
+        e, _ = T._scan_layers_enc(params["enc_layers"], e, cfg,
+                                  positions=e_pos, akey=akey)
+        enc_out = L.rmsnorm_apply(params["enc_norm"], e, cfg.norm_eps)
+
+    positions = jnp.arange(x.shape[1])[None]
+    cl = cache_len_for(cfg, max_seq)
+
+    def body(carry, inp):
+        xx = carry
+        layer_p, li = inp
+        lk = None if akey is None else jax.random.fold_in(akey, li)
+        yy, _, cache = T.block_prefill(layer_p, xx, cfg,
+                                       positions=positions, cache_len=cl,
+                                       enc_out=enc_out, akey=lk)
+        return yy, cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    n = cfg.n_layers
+    x, caches = jax.lax.scan(
+        body, x, (params["layers"], jnp.arange(n)))
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    x_last = x[:, -1:]
+    if cfg.tie_embeddings:
+        logits = L.unembed_apply(params["embed"], x_last)
+    else:
+        logits = L.dense_apply(params["unembed"], x_last)
+    caches["pos"] = jnp.full((tokens.shape[0],), tokens.shape[1],
+                             jnp.int32)
+    return logits, caches
+
+
+def serve_step(params, tokens_t: Array, cache: Dict[str, Array],
+               cfg: ModelConfig, akey=None
+               ) -> Tuple[Array, Dict[str, Array]]:
+    """One batched decode step.  tokens_t (B, 1) -> (logits (B,1,V), cache)."""
+    pos = cache["pos"]
+    x = L.embed_apply(params["embed"], tokens_t)
+    x = shard(x, "batch", None, "embed_act")
+
+    layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+
+    def body(x_t, inp):
+        layer_p, lc, li = inp
+        lk = None if akey is None else jax.random.fold_in(akey, li)
+        y_t, nc = T.block_decode(layer_p, x_t, lc, pos, cfg, akey=lk)
+        return y_t, nc
+
+    n = cfg.n_layers
+    x, new_layer_cache = jax.lax.scan(
+        body, x, (params["layers"], layer_cache, jnp.arange(n)))
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed_apply(params["embed"], x)
+    else:
+        logits = L.dense_apply(params["unembed"], x)
+    new_cache = dict(new_layer_cache)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def greedy_generate(params, prompt: Array, cfg: ModelConfig, *,
+                    n_steps: int, max_seq: int,
+                    enc_embeds: Optional[Array] = None, akey=None):
+    """Simple batched greedy loop (example/e2e-test driver)."""
+    logits, cache = prefill(params, prompt, cfg, max_seq=max_seq,
+                            enc_embeds=enc_embeds, akey=akey)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+
+    def step(carry, _):
+        tok, cache = carry
+        logits, cache = serve_step(params, tok, cache, cfg, akey=akey)
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return (nxt, cache), nxt.squeeze(-1)
+
+    (_, cache), toks = jax.lax.scan(step, (tok, cache), None,
+                                    length=n_steps - 1)
+    out = jnp.concatenate([tok, toks.T], axis=1)
+    return out, cache

@@ -1,0 +1,1 @@
+"""Training drivers: CNN repro trainer + distributed LM train step."""

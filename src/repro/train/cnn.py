@@ -1,0 +1,127 @@
+"""Training driver for the paper's CNN experiments (single-host).
+
+Runs the Results-section protocol: SGD, fixed eta, epoch-wise test-error
+tracking, analog or FP mode.  Emits a JSON-serialisable history so the
+benchmark harness (one per paper figure) can aggregate runs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lenet
+from repro.optim import analog_sgd, sgd
+
+
+def make_train_step(cfg: lenet.LeNetConfig):
+    opt = analog_sgd() if cfg.mode == "analog" else sgd(cfg.lr)
+
+    @jax.jit
+    def step(params, opt_state, images, labels, key):
+        grads = jax.grad(lenet.loss_fn, allow_int=True)(
+            params, images, labels, key, cfg)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state
+
+    return step, opt
+
+
+def make_eval(cfg: lenet.LeNetConfig, batch: int = 256):
+    @jax.jit
+    def eval_batch(params, images, labels, key):
+        return lenet.accuracy(params, images, labels, key, cfg)
+
+    def evaluate(params, xs, ys, key) -> float:
+        accs, ns = [], []
+        for i in range(0, len(xs), batch):
+            kb = jax.random.fold_in(key, i)
+            xb, yb = xs[i:i + batch], ys[i:i + batch]
+            accs.append(float(eval_batch(params, xb, yb, kb)))
+            ns.append(len(xb))
+        return 1.0 - float(np.average(accs, weights=ns))
+
+    return evaluate
+
+
+def train(cfg: lenet.LeNetConfig, *, epochs: int = 15, batch: int = 8,
+          n_train: int = 8192, n_test: int = 2048, seed: int = 0,
+          log_path: Optional[str] = None, verbose: bool = True,
+          eval_every_epoch: bool = True) -> Dict:
+    """Train per the paper's protocol; returns {test_error: [...], ...}."""
+    from repro.data import mnist
+    (xtr, ytr), (xte, yte) = mnist.load_splits(n_train, n_test, seed=seed,
+                                               verbose=verbose)
+    key = jax.random.key(seed)
+    k_init, k_data, k_train, k_eval = jax.random.split(key, 4)
+
+    params = lenet.init(k_init, cfg)
+    step, opt = make_train_step(cfg)
+    opt_state = opt.init(params)
+    evaluate = make_eval(cfg)
+
+    steps_per_epoch = len(xtr) // batch
+    history: List[float] = []
+    t0 = time.time()
+    for epoch in range(epochs):
+        perm = np.asarray(jax.random.permutation(
+            jax.random.fold_in(k_data, epoch), len(xtr)))
+        for s in range(steps_per_epoch):
+            idx = perm[s * batch:(s + 1) * batch]
+            ks = jax.random.fold_in(k_train, epoch * steps_per_epoch + s)
+            params, opt_state = step(params, opt_state, xtr[idx], ytr[idx], ks)
+        if eval_every_epoch or epoch == epochs - 1:
+            err = evaluate(params, xte, yte,
+                           jax.random.fold_in(k_eval, epoch))
+            history.append(err)
+            if verbose:
+                print(f"[epoch {epoch + 1:3d}/{epochs}] test error "
+                      f"{100 * err:6.2f}%  ({time.time() - t0:6.1f}s)",
+                      flush=True)
+            if log_path:
+                _dump(log_path, cfg, history, epochs, batch, n_train, seed)
+    result = {
+        "test_error": history,
+        "final_error": history[-1] if history else None,
+        "mean_last5": float(np.mean(history[-5:])) if history else None,
+        "std_last5": float(np.std(history[-5:])) if history else None,
+        "wallclock_s": time.time() - t0,
+    }
+    if log_path:
+        _dump(log_path, cfg, history, epochs, batch, n_train, seed,
+              extra=result)
+    return result
+
+
+def _describe(cfg: lenet.LeNetConfig) -> Dict:
+    out = {"mode": cfg.mode, "lr": cfg.lr}
+    if cfg.layer_cfgs:
+        for name, c in cfg.layer_cfgs.items():
+            out[name] = {
+                "bl": c.bl, "nm": c.noise_management, "bm": c.bound_management,
+                "um": c.update_management, "noise": c.read_noise,
+                "bound": c.out_bound, "dpw": c.devices_per_weight,
+                "dtod": c.dw_min_dtod, "ctoc": c.dw_min_ctoc,
+                "imb": c.imbalance_dtod,
+            }
+    return out
+
+
+def _dump(path, cfg, history, epochs, batch, n_train, seed, extra=None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {
+        "config": _describe(cfg),
+        "protocol": {"epochs": epochs, "batch": batch, "n_train": n_train,
+                     "seed": seed},
+        "test_error": history,
+    }
+    if extra:
+        payload.update({k: v for k, v in extra.items() if k != "test_error"})
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)

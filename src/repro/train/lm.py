@@ -1,0 +1,88 @@
+"""LM training step: loss, gradients, optimizer application, metrics.
+
+The same step factory serves CPU smoke tests (tiny configs, real data) and
+the multi-pod dry-run (full configs, AOT-lowered with ShapeDtypeStructs).
+Analog (RPU) mode works through the exact same path: the analog layers'
+custom VJP turns the backward pass into the paper's three-cycle update and
+``optim.analog_sgd`` applies it (allow_int grads carry the tile seeds).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.optim import Optimizer, adamw, analog_sgd
+
+Array = jax.Array
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def loss_fn(params, batch: Dict[str, Array], cfg: ModelConfig,
+            key: Optional[Array] = None) -> Tuple[Array, Dict[str, Array]]:
+    """Next-token cross entropy (+ MoE aux).  batch['tokens'] (B, S)."""
+    akey = key if cfg.analog is not None else None
+    logits, aux = transformer.forward(
+        params, batch["tokens"][:, :-1], cfg,
+        frontend_embeds=batch.get("frontend_embeds"),
+        enc_embeds=batch.get("enc_embeds"),
+        akey=akey)
+    targets = batch["tokens"][:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    total = loss + AUX_LOSS_WEIGHT * aux
+    return total, {"loss": loss, "aux": aux,
+                   "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+def default_optimizer(cfg: ModelConfig, lr: float = 3e-4) -> Optimizer:
+    if cfg.analog is not None:
+        return analog_sgd()
+    return adamw(lr)
+
+
+def make_train_step(cfg: ModelConfig, opt: Optional[Optimizer] = None):
+    opt = opt or default_optimizer(cfg)
+
+    def train_step(params, opt_state, batch, key):
+        grads, metrics = jax.grad(
+            lambda p: loss_fn(p, batch, cfg, key), has_aux=True,
+            allow_int=True)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+def init_train_state(key, cfg: ModelConfig, opt: Optional[Optimizer] = None):
+    """Concrete params + optimizer state (smoke tests / real training)."""
+    opt = opt or default_optimizer(cfg)
+    params, axes = transformer.init_lm(key, cfg)
+    return params, opt.init(params), axes
+
+
+def abstract_train_state(key, cfg: ModelConfig,
+                         opt: Optional[Optimizer] = None):
+    """ShapeDtypeStruct state for AOT dry-run lowering (no allocation).
+
+    The logical-axes tree is pure-python metadata built at trace time, so it
+    is captured through a side box while ``eval_shape`` abstracts the params.
+    """
+    opt = opt or default_optimizer(cfg)
+    box = {}
+
+    def build(k):
+        p, a = transformer.init_lm(k, cfg)
+        box["axes"] = a
+        return p
+
+    params_shape = jax.eval_shape(build, key)
+    opt_shape = jax.eval_shape(opt.init, params_shape)
+    return params_shape, opt_shape, box["axes"]

@@ -1,0 +1,2 @@
+"""Shared utilities: fast counter-hash RNG, tree helpers."""
+from repro.utils import fastrng  # noqa: F401

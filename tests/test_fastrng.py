@@ -1,0 +1,46 @@
+"""Statistical quality tests for the counter-hash RNG (simulation entropy)."""
+
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.utils import fastrng
+
+
+def test_uniform_moments():
+    u = np.asarray(fastrng.uniform(jax.random.key(0), (200_000,)))
+    assert abs(u.mean() - 0.5) < 2e-3
+    assert abs(u.std() - (1 / 12) ** 0.5) < 2e-3
+    assert u.min() >= 0.0 and u.max() < 1.0
+
+
+def test_normal_moments():
+    z = np.asarray(fastrng.normal(jax.random.key(1), (200_000,)))
+    assert abs(z.mean()) < 8e-3
+    assert abs(z.std() - 1.0) < 8e-3
+    skew = float(((z - z.mean()) ** 3).mean() / z.std() ** 3)
+    kurt = float(((z - z.mean()) ** 4).mean() / z.std() ** 4)
+    assert abs(skew) < 0.03
+    assert abs(kurt - 3.0) < 0.08
+
+
+def test_low_correlation():
+    u1 = np.asarray(fastrng.uniform(jax.random.key(2), (100_000,)))
+    u2 = np.asarray(fastrng.uniform(jax.random.key(3), (100_000,)))
+    assert abs(np.corrcoef(u1, u2)[0, 1]) < 0.01        # across seeds
+    assert abs(np.corrcoef(u1[:-1], u1[1:])[0, 1]) < 0.01   # lag-1
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 30))
+def test_deterministic(seed):
+    k = jax.random.key(seed)
+    a = np.asarray(fastrng.uniform(k, (64,)))
+    b = np.asarray(fastrng.uniform(k, (64,)))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_histogram_uniformity():
+    u = np.asarray(fastrng.uniform(jax.random.key(5), (500_000,)))
+    h, _ = np.histogram(u, bins=128)
+    assert h.std() / h.mean() < 0.03

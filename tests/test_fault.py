@@ -1,0 +1,121 @@
+"""Fault tolerance: watchdog, preemption, restart loop, elastic resize,
+gradient compression."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.elastic import resize_plan
+from repro.distributed.fault import (PreemptionHandler, StragglerWatchdog,
+                                     run_with_restarts)
+from repro.optim.compression import (compress_gradients,
+                                     decompress_gradients,
+                                     ef_int8_compressor, init_residuals,
+                                     topk_compressor)
+
+
+def test_watchdog_flags_stragglers_and_trips():
+    trips = []
+    wd = StragglerWatchdog(threshold=2.0, trip_after=3,
+                           on_trip=trips.append)
+    for i in range(20):
+        wd.observe(i, 0.1)
+    assert not any(r.is_straggler for r in wd.reports)
+    for i in range(3):
+        rep = wd.observe(20 + i, 0.5)
+        assert rep.is_straggler
+    assert len(trips) == 1
+    # stragglers must not poison the EWMA baseline
+    assert wd.ewma < 0.12
+
+
+def test_preemption_handler():
+    p = PreemptionHandler()
+    assert not p.preemption_requested()
+    p.simulate()
+    assert p.preemption_requested()
+
+
+def test_run_with_restarts_recovers():
+    calls = {"n": 0}
+
+    def make_state():
+        return {"attempt": calls["n"]}
+
+    def run(state):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("simulated node failure")
+
+    attempts = run_with_restarts(make_state, run, max_restarts=5)
+    assert attempts == 2
+    assert calls["n"] == 3
+
+
+def test_run_with_restarts_gives_up():
+    def run(state):
+        raise RuntimeError("permanent")
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(dict, run, max_restarts=2)
+
+
+def test_resize_plan():
+    p = resize_plan(512, model_parallel=16)
+    assert p.mesh_shape == (32, 16) and p.dropped == 0
+    p = resize_plan(497, model_parallel=16)
+    assert p.mesh_shape == (31, 16) and p.dropped == 1
+    p = resize_plan(512, model_parallel=16, multi_pod=True)
+    assert p.mesh_shape == (2, 16, 16)
+    p = resize_plan(300, model_parallel=16, multi_pod=True)
+    assert p.mesh_shape == (2, 9, 16) and p.n_devices == 288
+    p = resize_plan(8, model_parallel=16)
+    assert p.n_devices >= 1   # degrades TP rather than dying
+
+
+# --- gradient compression ------------------------------------------------
+
+def test_int8_error_feedback_converges():
+    """Sum of dequantised grads + final residual == sum of true grads."""
+    compress, decompress = ef_int8_compressor()
+    rng = np.random.default_rng(0)
+    residual = jnp.zeros((64,))
+    total_true = np.zeros((64,))
+    total_sent = np.zeros((64,))
+    for _ in range(50):
+        g = jnp.asarray(rng.normal(0, 1e-3, 64), jnp.float32)
+        payload, residual = compress(g, residual)
+        total_true += np.asarray(g)
+        total_sent += np.asarray(decompress(payload))
+    np.testing.assert_allclose(total_sent + np.asarray(residual),
+                               total_true, rtol=1e-4, atol=1e-6)
+
+
+def test_topk_error_feedback_converges():
+    compress, decompress = topk_compressor(fraction=0.1)
+    rng = np.random.default_rng(0)
+    residual = jnp.zeros((50,))
+    total_true = np.zeros(50)
+    total_sent = np.zeros(50)
+    for _ in range(30):
+        g = jnp.asarray(rng.normal(0, 1.0, 50), jnp.float32)
+        payload, residual = compress(g, residual)
+        total_true += np.asarray(g)
+        total_sent += np.asarray(decompress(payload)).reshape(50)
+    np.testing.assert_allclose(total_sent + np.asarray(residual).ravel(),
+                               total_true, rtol=1e-4, atol=1e-4)
+
+
+def test_tree_compression_roundtrip():
+    params = {"a": jnp.ones((8, 8)), "b": {"c": jnp.ones((4,))}}
+    grads = jax.tree_util.tree_map(lambda p: p * 0.01, params)
+    residuals = init_residuals(params)
+    payloads, new_res = compress_gradients(grads, residuals,
+                                           ef_int8_compressor())
+    out = decompress_gradients(payloads, params, ef_int8_compressor())
+    for l1, l2 in zip(jax.tree_util.tree_leaves(out),
+                      jax.tree_util.tree_leaves(grads)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   atol=1e-4)

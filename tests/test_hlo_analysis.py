@@ -1,0 +1,69 @@
+"""Unit tests for the trip-count-aware HLO analyzer on synthetic HLO text."""
+
+import numpy as np
+
+from repro.launch import hlo_analysis as H
+
+SYNTH = """\
+HloModule test, is_scheduled=true
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}, to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%ni, %ar)
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[8,8]) -> f32[8,8] {
+  %arg = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]{1,0}) tuple(%zero, %arg)
+  %w = (s32[], f32[8,8]{1,0}) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_trip_count_from_root_compare():
+    comps, entry = H.split_computations(SYNTH)
+    assert entry == "%main"
+    assert H._trip_count(comps["%cond"]) == 12
+
+
+def test_multipliers_propagate_through_while():
+    mult, comps, entry = H.multiplier_map(SYNTH)
+    assert mult["%main"] == 1
+    assert mult["%body"] == 12
+    assert mult["%cond"] == 12
+    assert mult["%add"] == 12           # to_apply inside the loop
+
+
+def test_dot_flops_and_collectives_scaled_by_trips():
+    a = H.analyse_hlo(SYNTH)
+    # dot: 2 * 8*8 out * 8 contracted = 1024 flops, x12 trips
+    assert a["dot_flops"] == 1024 * 12
+    # all-reduce payload: 8*8*4 bytes x12
+    assert a["coll_all-reduce"] == 256 * 12
+    assert a["coll_total"] == 256 * 12
+
+
+def test_fallback_max_constant():
+    lines = ["%c1 = s32[] constant(7)", "%x = pred[] compare(%a, %b)"]
+    assert H._trip_count(lines) == 7

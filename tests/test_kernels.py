@@ -1,0 +1,113 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle.
+
+Sweeps shapes / segment counts / transpose / noise settings per the kernel
+deliverable contract; the on-chip counter-hash RNG is bit-compatible with the
+reference, so tolerances are matmul-reassociation-level only.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.device import RPUConfig, sample_device_maps
+from repro.core import update as update_lib
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.noisy_mvm import noisy_mvm_pallas
+from repro.kernels.pulse_update import pulse_update_pallas
+from repro.utils import fastrng
+
+
+MVM_CASES = [
+    # (rows, cols, batch, sigma, alpha, n_seg, transpose)
+    (16, 26, 8, 0.06, 12.0, 1, False),       # the paper's K1 tile
+    (32, 401, 64, 0.06, 12.0, 1, False),     # K2
+    (10, 129, 8, 0.06, 12.0, 1, True),       # W4 transpose read
+    (200, 300, 100, 0.06, 12.0, 3, False),   # contraction split x3
+    (300, 200, 50, 0.06, 12.0, 2, True),     # transpose + split
+    (128, 128, 128, 0.0, float("inf"), 1, False),   # ideal device
+    (257, 129, 33, 0.06, 2.0, 1, False),     # heavy saturation, odd dims
+]
+
+
+@pytest.mark.parametrize("r,c,b,sigma,alpha,n_seg,tr", MVM_CASES)
+def test_noisy_mvm_matches_reference(r, c, b, sigma, alpha, n_seg, tr):
+    key = jax.random.key(hash((r, c, b, n_seg, tr)) % (2 ** 31))
+    w = jax.random.normal(jax.random.key(1), (r, c)) * 0.2
+    k_in = r if tr else c
+    x = jax.random.normal(jax.random.key(2), (b, k_in)) * 0.5
+
+    cfg = RPUConfig(
+        read_noise=sigma, out_bound=alpha,
+        max_array_cols=10 ** 9 if tr else -(-c // n_seg),
+        max_array_rows=-(-r // n_seg) if tr else 10 ** 9)
+    y_ref, sat_ref = kref.noisy_mvm_ref(w, x, key, cfg, transpose=tr)
+    y_k, sat_blk = noisy_mvm_pallas(
+        w, x, fastrng.key_to_seed(key), sigma=sigma, alpha=alpha,
+        n_seg=n_seg, transpose=tr, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_k),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(sat_ref), np.asarray(jnp.any(sat_blk > 0, axis=-1)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_noisy_mvm_dtypes(dtype):
+    w = (jax.random.normal(jax.random.key(1), (64, 96)) * 0.2)
+    x = (jax.random.normal(jax.random.key(2), (32, 96)) * 0.5).astype(dtype)
+    key = jax.random.key(9)
+    cfg = RPUConfig(dtype=dtype)
+    y_ref, _ = kref.noisy_mvm_ref(w.astype(dtype), x, key, cfg)
+    y_k, _ = noisy_mvm_pallas(
+        w.astype(dtype), x, fastrng.key_to_seed(key),
+        sigma=cfg.read_noise, alpha=cfg.out_bound, interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(y_ref, np.float32),
+                               np.asarray(y_k, np.float32),
+                               rtol=tol, atol=tol)
+
+
+PULSE_CASES = [
+    # (m, n, batch, bl, ctoc)
+    (16, 26, 8, 10, 0.3),
+    (32, 401, 16, 1, 0.3),
+    (128, 513, 4, 10, 0.0),
+    (130, 260, 64, 2, 0.3),    # non-128-aligned
+    (10, 129, 1, 40, 0.3),     # single sample, long stream
+]
+
+
+@pytest.mark.parametrize("m,n,b,bl,ctoc", PULSE_CASES)
+def test_pulse_update_matches_reference(m, n, b, bl, ctoc):
+    cfg_ref = RPUConfig(bl=bl, dw_min_ctoc=ctoc, use_pallas=False)
+    cfg_ker = RPUConfig(bl=bl, dw_min_ctoc=ctoc, use_pallas=True)
+    maps = sample_device_maps(jax.random.key(3), m, n, cfg_ref)
+    w = jax.random.normal(jax.random.key(1), (m, n)) * 0.1
+    x = jax.random.normal(jax.random.key(2), (b, n)) * 0.3
+    d = jax.random.normal(jax.random.key(4), (b, m)) * 0.1
+    key = jax.random.key(77)
+    w_ref = update_lib.pulse_update(w, maps, x, d, key, cfg_ref, 0.01)
+    w_ker = update_lib.pulse_update(w, maps, x, d, key, cfg_ker, 0.01)
+    np.testing.assert_allclose(np.asarray(w_ref), np.asarray(w_ker),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_pulse_update_respects_bounds():
+    cfg = RPUConfig(bl=10, use_pallas=True)
+    maps = sample_device_maps(jax.random.key(3), 32, 48, cfg)
+    w = jnp.clip(jax.random.normal(jax.random.key(1), (32, 48)),
+                 -maps.bound, maps.bound)
+    x = jnp.ones((64, 48))
+    d = jnp.ones((64, 32))
+    new_w = update_lib.pulse_update(w, maps, x, d, jax.random.key(5), cfg, 0.5)
+    assert bool(jnp.all(jnp.abs(new_w) <= maps.bound + 1e-6))
+
+
+def test_ops_wrapper_batch_shapes():
+    cfg = RPUConfig(use_pallas=True)
+    w = jax.random.normal(jax.random.key(1), (40, 30)) * 0.2
+    x = jax.random.normal(jax.random.key(2), (4, 7, 30))
+    y, sat = kops.noisy_mvm(w, x, jax.random.key(5), cfg)
+    assert y.shape == (4, 7, 40)
+    assert sat.shape == (4, 7)

@@ -1,0 +1,141 @@
+"""Property tests (hypothesis) for the management techniques — the paper's
+Eqs. 3-4 invariants — plus unit tests for update management.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import management
+from repro.core.device import RPUConfig
+from repro.core.tile import analog_mvm_reference
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+def _mvm(w, cfg):
+    def f(x, key):
+        return analog_mvm_reference(w, x, key, cfg)
+    return f
+
+
+# --- Noise management (Eq. 3) ------------------------------------------------
+
+@_settings
+@given(scale=st.floats(1e-6, 1e3), seed=st.integers(0, 2 ** 20))
+def test_nm_snr_invariant_to_input_scale(scale, seed):
+    """NM keeps the SNR fixed for arbitrarily small error vectors: the
+    *absolute* noise on z scales with |delta|, i.e. z/scale is distributed
+    identically whatever the scale (Eq. 3)."""
+    cfg = RPUConfig(out_bound=float("inf"))
+    w = jax.random.normal(jax.random.key(0), (32, 16)) * 0.2
+    d = jax.random.normal(jax.random.key(1), (4, 16)) * 0.1
+    key = jax.random.key(seed)
+    z1, _ = management.with_noise_management(_mvm(w, cfg), d, key)
+    z2, _ = management.with_noise_management(_mvm(w, cfg), d * scale, key)
+    # same key -> identical array noise; NM rescaling must commute exactly
+    np.testing.assert_allclose(np.asarray(z2), np.asarray(z1) * scale,
+                               rtol=1e-4, atol=1e-6 * scale)
+
+
+@_settings
+@given(seed=st.integers(0, 2 ** 20))
+def test_nm_reduces_noise_for_small_inputs(seed):
+    """Without NM, z = W^T d + sigma; with NM, z = W^T d + sigma * d_max.
+    For |d| << 1 the NM error must be ~d_max smaller."""
+    cfg = RPUConfig(out_bound=float("inf"))
+    w = jax.random.normal(jax.random.key(0), (32, 16)) * 0.2
+    d = jax.random.normal(jax.random.key(1), (64, 16)) * 1e-3
+    clean = jnp.einsum("...k,ok->...o", d, w)
+    key = jax.random.key(seed)
+    z_nm, _ = management.with_noise_management(_mvm(w, cfg), d, key)
+    z_raw, _ = _mvm(w, cfg)(d, key)
+    err_nm = float(jnp.sqrt(jnp.mean((z_nm - clean) ** 2)))
+    err_raw = float(jnp.sqrt(jnp.mean((z_raw - clean) ** 2)))
+    assert err_nm < err_raw * 0.05   # d_max ~ 2e-3 => ~500x reduction
+
+
+def test_nm_zero_vector_safe():
+    cfg = RPUConfig()
+    w = jnp.ones((8, 4)) * 0.1
+    z, _ = management.with_noise_management(_mvm(w, cfg), jnp.zeros((2, 4)),
+                                            jax.random.key(0))
+    assert bool(jnp.all(jnp.isfinite(z)))
+
+
+# --- Bound management (Eq. 4) ------------------------------------------------
+
+@_settings
+@given(mag=st.floats(1.0, 200.0), seed=st.integers(0, 2 ** 20))
+def test_bm_recovers_saturated_outputs(mag, seed):
+    """Outputs way past alpha must be recovered to the true value by the
+    halve-and-retry loop (effective bound 2^n alpha)."""
+    cfg = RPUConfig(read_noise=0.0, out_bound=12.0)
+    w = jnp.eye(8) * mag                     # y = mag * x, saturates for mag>12
+    x = jnp.ones((3, 8))
+    y, _ = management.with_bound_management(_mvm(w, cfg), x,
+                                            jax.random.key(seed), 20)
+    np.testing.assert_allclose(np.asarray(y), mag, rtol=1e-5)
+
+
+def test_bm_without_saturation_is_single_read():
+    cfg = RPUConfig(read_noise=0.0, out_bound=12.0)
+    w = jnp.eye(4) * 2.0
+    x = jnp.ones((2, 4))
+    y, _ = management.with_bound_management(_mvm(w, cfg), x,
+                                            jax.random.key(0), 10)
+    np.testing.assert_allclose(np.asarray(y), 2.0, rtol=1e-6)
+
+
+def test_bm_max_iters_caps_effective_bound():
+    cfg = RPUConfig(read_noise=0.0, out_bound=12.0)
+    w = jnp.eye(4) * 1e9                     # can't be recovered in n iters
+    x = jnp.ones((2, 4))
+    y, sat = management.with_bound_management(_mvm(w, cfg), x,
+                                              jax.random.key(0), 5)
+    assert float(jnp.max(y)) <= 2.0 ** 5 * 12.0 + 1e-3
+    assert bool(jnp.all(sat))
+
+
+@_settings
+@given(seed=st.integers(0, 2 ** 20))
+def test_bm_per_vector_scaling(seed):
+    """Saturated and unsaturated vectors coexist: each gets its own 2^n."""
+    cfg = RPUConfig(read_noise=0.0, out_bound=12.0)
+    w = jnp.eye(4)
+    x = jnp.stack([jnp.full((4,), 100.0), jnp.full((4,), 1.0)])
+    y, _ = management.with_bound_management(_mvm(w, cfg), x,
+                                            jax.random.key(seed), 20)
+    np.testing.assert_allclose(np.asarray(y[0]), 100.0, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(y[1]), 1.0, rtol=1e-5)
+
+
+# --- Update management --------------------------------------------------------
+
+def test_um_factors_preserve_learning_rate():
+    """C_x * C_d must always equal eta/(BL dw_min) (Eq. 1 expectation)."""
+    cfg = RPUConfig(bl=10, dw_min=0.001, update_management=True)
+    x = jax.random.normal(jax.random.key(0), (4, 16))
+    d = jax.random.normal(jax.random.key(1), (4, 8)) * 1e-3
+    cx, cd = management.um_factors(x, d, cfg, lr=0.01)
+    np.testing.assert_allclose(float(cx * cd), 0.01 / (10 * 0.001), rtol=1e-5)
+
+
+def test_um_balances_pulse_probabilities():
+    cfg = RPUConfig(bl=1, dw_min=0.001, update_management=True)
+    x = jnp.ones((1, 16))
+    d = jnp.full((1, 8), 1e-4)
+    cx, cd = management.um_factors(x, d, cfg, lr=0.01)
+    # rescaled extrema must now be the same order
+    px = float(jnp.max(jnp.abs(cx * x)))
+    pd = float(jnp.max(jnp.abs(cd * d)))
+    np.testing.assert_allclose(px, pd, rtol=1e-4)
+
+
+def test_um_disabled_gives_symmetric_factors():
+    cfg = RPUConfig(bl=10, dw_min=0.001, update_management=False)
+    x = jnp.ones((1, 16))
+    d = jnp.full((1, 8), 1e-4)
+    cx, cd = management.um_factors(x, d, cfg, lr=0.01)
+    assert float(cx) == float(cd)

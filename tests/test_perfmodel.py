@@ -1,0 +1,48 @@
+"""RPU chip performance model (paper Table 2 / Discussion)."""
+
+import pytest
+
+from repro.core import perfmodel as pm
+
+
+def test_table2_verbatim():
+    layers = pm.alexnet_layers()
+    total = sum(l.macs for l in layers)
+    assert abs(total - 1.14e9) / 1.14e9 < 0.01      # "Total MACs = 1.14 G"
+    k2 = layers[1]
+    assert k2.macs == 256 * 2400 * 729               # 448 M
+    assert 0.38 < k2.macs / total < 0.41             # "~40% of the workload"
+
+
+def test_rpu_time_is_max_ws_tmeas():
+    chip = pm.RPUChipSpec()
+    t, name = pm.image_time_rpu(pm.alexnet_layers(), chip)
+    assert name == "K1"                               # paper: K1 bottleneck
+    assert abs(t - 3025 * 80e-9) < 1e-9               # 242 us
+
+
+def test_bimodal_design_shifts_bottleneck():
+    chip = pm.RPUChipSpec(bimodal=True)
+    t, name = pm.image_time_rpu(pm.alexnet_layers(), chip)
+    assert name == "K2"                               # K1 fits small array
+    assert abs(t - 729 * 80e-9) < 1e-9                # 58.3 us
+
+
+def test_split_halves_ws():
+    layers = pm.split_bottleneck(pm.alexnet_layers(), 2)
+    t, name = pm.image_time_rpu(layers, pm.RPUChipSpec())
+    assert abs(t - 3025 / 2 * 80e-9) < 1e-9           # 121 us, still K1
+    assert name == "K1"
+
+
+def test_conventional_time_additive():
+    t = pm.image_time_conventional(pm.alexnet_layers(), 1e12)
+    assert abs(t - sum(l.macs for l in pm.alexnet_layers()) / 1e12) < 1e-12
+
+
+def test_lenet_geometry():
+    layers = pm.lenet_layers()
+    assert [(l.rows, l.cols) for l in layers] == [
+        (16, 26), (32, 401), (128, 513), (10, 129)]
+    assert layers[0].weight_sharing == 576
+    assert layers[1].weight_sharing == 64

@@ -1,0 +1,70 @@
+"""Serving-path features: int8 KV cache quantisation, a2a MoE equivalence
+(in-process single-device parts; multi-device a2a lives in
+tests/test_distributed.py)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import attention, transformer
+from repro.serve import engine
+
+
+def test_kv_quant_roundtrip():
+    x = jax.random.normal(jax.random.key(0), (2, 4, 3, 8)) * 1.5
+    q = attention.quantize_kv(x)
+    assert q.dtype == jnp.int8
+    d = attention.dequantize_kv(q, jnp.float32)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(x), atol=0.04)
+
+
+def test_kv_quant_decode_close_to_fp():
+    """int8 KV decode logits must track the fp cache closely."""
+    cfg = registry.get_config("qwen3_14b", smoke=True)
+    cfg = dataclasses.replace(cfg, param_dtype=jnp.float32,
+                              act_dtype=jnp.float32, remat=False)
+    cfg_q = dataclasses.replace(cfg, kv_cache_quant=True)
+    params, _ = transformer.init_lm(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab)
+
+    _, cache_f = engine.prefill(params, toks[:, :-1], cfg, max_seq=16)
+    lf, _ = engine.serve_step(params, toks[:, -1:], cache_f, cfg)
+    _, cache_q = engine.prefill(params, toks[:, :-1], cfg_q, max_seq=16)
+    assert cache_q["k"].dtype == jnp.int8
+    lq, _ = engine.serve_step(params, toks[:, -1:], cache_q, cfg_q)
+
+    pf = jax.nn.softmax(lf[:, 0].astype(jnp.float32))
+    pq = jax.nn.softmax(lq[:, 0].astype(jnp.float32))
+    # distributional closeness (greedy token usually identical)
+    assert float(jnp.max(jnp.abs(pf - pq))) < 0.05
+
+
+def test_moe_a2a_falls_back_without_mesh():
+    """dispatch='a2a' without an active mesh context uses the gather path."""
+    from repro.models import moe
+    cfg = registry.get_config("mixtral_8x7b", smoke=True)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch="a2a"))
+    p, _ = moe.init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model),
+                          cfg.act_dtype)
+    y, aux = moe.apply(p, x, cfg)
+    assert y.shape == x.shape
+
+
+def test_cache_axes_matches_init_cache():
+    from repro.distributed.sharding import is_axes_leaf
+    for arch in ("deepseek_7b", "mamba2_130m", "hymba_1_5b",
+                 "seamless_m4t_medium"):
+        cfg = registry.get_config(arch, smoke=True)
+        cache = jax.eval_shape(
+            lambda: engine.init_cache(cfg, 2, 32, src_len=8))
+        axes = engine.cache_axes(cfg)
+        sa = jax.tree_util.tree_structure(
+            axes, is_leaf=is_axes_leaf)
+        sc = jax.tree_util.tree_structure(cache)
+        assert sa == sc, (arch, axes, cache)

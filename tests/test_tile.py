@@ -1,0 +1,111 @@
+"""Tile physics: array-split semantics, multi-device mapping, seeded maps,
+noise statistics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tile as tl
+from repro.core.device import RPUConfig, sample_device_maps
+
+
+def test_split_noise_scales_with_segments():
+    """k segments -> k independent reads -> noise std ~ sqrt(k) * sigma."""
+    w = jnp.zeros((8, 300))      # zero weights isolate the noise
+    x = jnp.ones((512, 300))
+
+    def noise_std(max_cols):
+        cfg = RPUConfig(max_array_cols=max_cols, out_bound=float("inf"))
+        y, _ = tl.analog_mvm_reference(w, x, jax.random.key(0), cfg)
+        return float(jnp.std(y))
+
+    s1 = noise_std(300)   # 1 segment
+    s3 = noise_std(100)   # 3 segments
+    np.testing.assert_allclose(s3 / s1, 3 ** 0.5, rtol=0.1)
+
+
+def test_split_partial_clipping_matters():
+    """Opposite-sign partials each beyond alpha must clip BEFORE summation
+    (physical behaviour) — a single unsplit read would cancel them."""
+    cfg = RPUConfig(read_noise=0.0, out_bound=1.0, max_array_cols=2)
+    w = jnp.array([[10.0, 10.0, -10.0, -10.0]])   # segs: +20 and -20
+    x = jnp.ones((1, 4))
+    y, sat = tl.analog_mvm_reference(w, x, jax.random.key(0), cfg)
+    # each partial clips to +-1 then sums to 0; unsplit would also give 0,
+    # but with e.g. +20,-10 the asymmetry shows:
+    w2 = jnp.array([[10.0, 10.0, -5.0, -5.0]])
+    y2, _ = tl.analog_mvm_reference(w2, x, jax.random.key(0), cfg)
+    assert float(y2[0, 0]) == 0.0      # clip(+20)=1, clip(-10)=-1 -> 0
+    cfg1 = RPUConfig(read_noise=0.0, out_bound=1.0)
+    y3, _ = tl.analog_mvm_reference(w2, x, jax.random.key(0), cfg1)
+    assert float(y3[0, 0]) == 1.0      # single read: clip(+10) = 1
+
+
+def test_transpose_read_is_wt():
+    cfg = RPUConfig(read_noise=0.0, out_bound=float("inf"))
+    w = jax.random.normal(jax.random.key(0), (6, 9))
+    d = jax.random.normal(jax.random.key(1), (3, 6))
+    z, _ = tl.analog_mvm_reference(w, d, jax.random.key(2), cfg,
+                                   transpose=True)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(d @ w), rtol=1e-5)
+
+
+def test_multi_device_forward_is_replica_mean():
+    cfg = dataclasses.replace(
+        RPUConfig(read_noise=0.0, out_bound=float("inf")),
+        devices_per_weight=3)
+    state = tl.init_tile(jax.random.key(0), 4, 8, cfg)
+    # perturb replicas differently
+    w = state.w.at[0].add(0.3).at[4].add(-0.3)
+    state = tl.TileState(w=w, maps=state.maps, seed=state.seed)
+    x = jax.random.normal(jax.random.key(1), (5, 8)) * 0.2
+    y = tl.tile_forward(state, x, jax.random.key(2), cfg)
+    want = x @ tl.effective_weights(state, cfg).T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_multi_device_backward_divides_by_replicas():
+    cfg = dataclasses.replace(
+        RPUConfig(read_noise=0.0, out_bound=float("inf")),
+        devices_per_weight=4)
+    state = tl.init_tile(jax.random.key(0), 4, 8, cfg)
+    d = jax.random.normal(jax.random.key(1), (3, 4)) * 0.2
+    z = tl.tile_backward(state, d, jax.random.key(2), cfg)
+    want = d @ tl.effective_weights(state, cfg)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(want), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_seeded_maps_deterministic():
+    cfg = RPUConfig(seeded_maps=True)
+    st1 = tl.init_tile(jax.random.key(7), 6, 9, cfg)
+    m1 = tl.tile_maps(st1, cfg)
+    m2 = tl.tile_maps(st1, cfg)
+    np.testing.assert_array_equal(np.asarray(m1.dw_up), np.asarray(m2.dw_up))
+    assert st1.maps is None     # nothing materialised
+
+
+def test_read_noise_statistics():
+    cfg = RPUConfig(out_bound=float("inf"))
+    w = jnp.zeros((4, 16))
+    x = jnp.ones((4096, 16))
+    y, _ = tl.analog_mvm_reference(w, x, jax.random.key(3), cfg)
+    assert abs(float(jnp.std(y)) - cfg.read_noise) < 0.005
+    assert abs(float(jnp.mean(y))) < 0.005
+
+
+def test_device_population_statistics():
+    cfg = RPUConfig()
+    maps = sample_device_maps(jax.random.key(0), 200, 200, cfg)
+    dw = np.asarray((maps.dw_up + maps.dw_dn) / 2)
+    assert abs(dw.mean() - cfg.dw_min) / cfg.dw_min < 0.05
+    assert abs(dw.std() / dw.mean() - cfg.dw_min_dtod) < 0.05
+    ratio = np.asarray(maps.dw_up / maps.dw_dn)
+    assert abs(ratio.mean() - 1.0) < 0.01
+    assert abs(ratio.std() - cfg.imbalance_dtod) < 0.01
+    bounds = np.asarray(maps.bound)
+    assert abs(bounds.mean() - cfg.w_bound) / cfg.w_bound < 0.05

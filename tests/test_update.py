@@ -1,0 +1,124 @@
+"""Statistical and structural tests of the stochastic-pulse update cycle."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import update as up
+from repro.core.device import (RPUConfig, sample_device_maps,
+                               effective_dtod_reduction)
+
+
+def _ideal_cfg(bl=10):
+    return RPUConfig(bl=bl, dw_min_ctoc=0.0, dw_min_dtod=0.0,
+                     imbalance_dtod=0.0)
+
+
+def test_expectation_matches_eq1():
+    """E[DW] = BL dw_min (Cx x)(Cd d)^T = lr * d x^T for |Cx|,|Cd|<1 inputs."""
+    cfg = _ideal_cfg()
+    maps = sample_device_maps(jax.random.key(5), 6, 9, cfg)
+    x = jnp.array([[0.3, -0.2, 0.1, 0.5, -0.4, 0.2, 0.0, 0.1, 0.25]])
+    d = jnp.array([[0.2, -0.1, 0.05, 0.3, -0.15, 0.12]])
+    lr = 0.01
+    f = jax.jit(lambda k: up.pulse_delta((6, 9), maps, x, d, k, cfg, lr))
+    n = 2000
+    acc = np.zeros((6, 9), np.float64)
+    for i in range(n):
+        acc += np.asarray(f(jax.random.key(i)))
+    emp = acc / n
+    want = lr * np.asarray(d).T @ np.asarray(x)
+    np.testing.assert_allclose(emp, want, atol=4e-5)
+    # the closed-form expectation helper agrees too
+    np.testing.assert_allclose(np.asarray(up.expected_update(x, d, cfg, lr)),
+                               want, atol=1e-7)
+
+
+def test_expectation_clips_probabilities():
+    """Pulse probability saturates at 1 -> expectation saturates too."""
+    cfg = _ideal_cfg(bl=1)        # C = sqrt(.01/.001) = 3.16
+    x = jnp.array([[2.0]])        # C*x > 1 -> fires every slot
+    d = jnp.array([[2.0]])
+    want = cfg.bl * cfg.dw_min    # one guaranteed coincidence per slot
+    got = float(up.expected_update(x, d, cfg, 0.01)[0, 0])
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 20), bl=st.sampled_from([1, 5, 10]))
+def test_update_sign_structure(seed, bl):
+    """Coincidences only move weights in the sign(d_i x_j) direction."""
+    cfg = _ideal_cfg(bl=bl)
+    maps = sample_device_maps(jax.random.key(5), 4, 4, cfg)
+    x = jnp.array([[0.5, -0.5, 0.5, -0.5]])
+    d = jnp.array([[0.5, 0.5, -0.5, -0.5]])
+    dw = np.asarray(up.pulse_delta((4, 4), maps, x, d,
+                                   jax.random.key(seed), cfg, 0.01))
+    sign = np.sign(np.asarray(d).T @ np.asarray(x))
+    assert np.all(dw * sign >= -1e-9)
+
+
+def test_batched_equals_contraction_of_samples():
+    """A batch of samples contracts identically to summing per-sample deltas
+    (same streams — weight-clip ordering aside, DESIGN.md §8)."""
+    cfg = _ideal_cfg(bl=4)
+    maps = sample_device_maps(jax.random.key(5), 8, 8, cfg)
+    key = jax.random.key(3)
+    x = jax.random.normal(jax.random.key(1), (6, 8)) * 0.3
+    d = jax.random.normal(jax.random.key(2), (6, 8)) * 0.2
+    batched = np.asarray(up.pulse_delta((8, 8), maps, x, d, key, cfg, 0.01))
+    # statistical equivalence: means over many keys match
+    f = jax.jit(lambda k: up.pulse_delta((8, 8), maps, x, d, k, cfg, 0.01))
+    n = 600
+    emp = np.mean([np.asarray(f(jax.random.key(i))) for i in range(n)], 0)
+    want = np.asarray(up.expected_update(x, d, cfg, 0.01))
+    np.testing.assert_allclose(emp, want, atol=2e-4)
+    assert batched.shape == want.shape
+
+
+def test_multi_device_replication_shapes_and_bounds():
+    cfg = dataclasses.replace(RPUConfig(), devices_per_weight=3)
+    maps = sample_device_maps(jax.random.key(5), 3 * 4, 8, cfg)
+    w = jnp.zeros((12, 8))
+    x = jnp.ones((2, 8)) * 0.4
+    d = jnp.ones((2, 4)) * 0.3
+    new_w = up.pulse_update(w, maps, x, d, jax.random.key(0), cfg, 0.01)
+    assert new_w.shape == (12, 8)
+    assert bool(jnp.all(jnp.abs(new_w) <= maps.bound))
+
+
+def test_multi_device_variance_reduction():
+    """Forward output variance from device variations drops ~ sqrt(#_d)."""
+    from repro.core import analog_linear as al
+    x = jax.random.normal(jax.random.key(9), (32, 16)) * 0.5
+
+    def spread(dpw, n_pop=24):
+        cfg = dataclasses.replace(
+            RPUConfig(read_noise=0.0, out_bound=float("inf")),
+            devices_per_weight=dpw)
+        outs = []
+        for i in range(n_pop):   # different fabricated device populations
+            st = al.init(jax.random.key(i), 16, 8, cfg, bias=False,
+                         w_init=jnp.zeros((8, 16)))
+            # program weights to +-w via many strong updates is slow; instead
+            # measure the *update* spread: one big update on zero weights
+            g = jax.grad(lambda s: al.apply(
+                s, x, jax.random.key(7), cfg, 1.0, bias=False).sum(),
+                allow_int=True)(st)
+            outs.append(np.asarray(g.w[:8] if dpw == 1 else
+                                   g.w.reshape(dpw, 8, -1).mean(0)))
+        return np.std(np.stack(outs), axis=0).mean()
+
+    s1 = spread(1)
+    s9 = spread(9)
+    ratio = s1 / s9
+    # paper: variability reduction ~ sqrt(#_d) = 3; allow slack (finite pop)
+    assert 1.8 < ratio < 4.5, ratio
+
+
+def test_effective_dtod_reduction_sqrt():
+    assert effective_dtod_reduction(13) == pytest.approx(13 ** 0.5)
