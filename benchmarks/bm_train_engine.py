@@ -1,0 +1,160 @@
+"""Benchmark: scan-fused training engine vs the legacy per-step loop.
+
+Measures steady-state training throughput (steps/sec, post-compile) for the
+paper's CNN workload — LeNet/MNIST at batch 8 — in digital (fp) and analog
+modes, across three configurations:
+
+* ``legacy`` — the seed hot path: one jitted dispatch per minibatch driven
+  from Python, with the conv-patches im2col and reduce_window maxpool whose
+  autodiff transposes dominated the backward cycle on CPU;
+* ``python`` — the same per-step loop on the rewritten ops (the parity
+  oracle for the scan engine);
+* ``scan``   — the scan-fused, device-resident epoch engine
+  (:mod:`repro.train.engine`): whole epoch in one dispatch, donated
+  (params, opt_state) carry.
+
+The headline number is ``scan`` vs ``legacy`` — the old path vs the new
+path end-to-end.  Results land in ``results/bench/bm_train_engine.json``.
+
+Run:  PYTHONPATH=src python benchmarks/bm_train_engine.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import contextlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS = os.path.join("results", "bench", "bm_train_engine.json")
+
+
+def _maxpool2_reduce_window(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+@contextlib.contextmanager
+def legacy_ops():
+    """Reconstruct the seed's conv/pool implementations."""
+    from repro.core import conv_mapping as cm
+    from repro.models import lenet
+    saved = (cm.im2col, lenet._maxpool2)
+    cm.im2col = cm.im2col_patches
+    lenet._maxpool2 = _maxpool2_reduce_window
+    try:
+        yield
+    finally:
+        cm.im2col, lenet._maxpool2 = saved
+
+
+def bench_python_loop(cfg, xtr, ytr, batch, epochs):
+    from repro.train import cnn
+    from repro.models import lenet
+    from repro.optim import analog_sgd, sgd
+
+    key = jax.random.key(0)
+    _, k_train = jax.random.split(key)
+    opt = analog_sgd() if cfg.mode == "analog" else sgd(cfg.lr)
+    params = lenet.init(key, cfg)
+    opt_state = opt.init(params)
+    step, _ = cnn.make_train_step(cfg, opt)
+
+    spe = len(xtr) // batch
+    # warmup / compile
+    params, opt_state = step(params, opt_state, xtr[:batch], ytr[:batch], key)
+    jax.block_until_ready(params["W4"].w)
+    t0 = time.time()
+    n = epochs * spe
+    for s in range(n):
+        i = (s * batch) % (len(xtr) - batch)
+        ks = jax.random.fold_in(k_train, s)
+        params, opt_state = step(params, opt_state,
+                                 xtr[i:i + batch], ytr[i:i + batch], ks)
+    jax.block_until_ready(params["W4"].w)
+    return n / (time.time() - t0)
+
+
+def bench_scan(cfg, xtr, ytr, batch, epochs):
+    from repro.train import engine as eng
+    from repro.models import lenet
+    from repro.optim import analog_sgd, sgd
+
+    key = jax.random.key(0)
+    k_data, k_train = jax.random.split(key)
+    opt = analog_sgd() if cfg.mode == "analog" else sgd(cfg.lr)
+    params = lenet.init(key, cfg)
+    opt_state = opt.init(params)
+    run_epoch = eng.make_cnn_epoch_fn(cfg, opt, batch=batch)
+    xd, yd = jnp.asarray(xtr), jnp.asarray(ytr)
+
+    spe = len(xtr) // batch
+    # warmup / compile
+    params, opt_state = run_epoch(params, opt_state, xd, yd,
+                                  k_data, k_train, 0)
+    jax.block_until_ready(params["W4"].w)
+    t0 = time.time()
+    for e in range(1, epochs + 1):
+        params, opt_state = run_epoch(params, opt_state, xd, yd,
+                                      k_data, k_train, e)
+    jax.block_until_ready(params["W4"].w)
+    return epochs * spe / (time.time() - t0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n-train", type=int, default=512)
+    ap.add_argument("--epochs", type=int, default=2,
+                    help="timed epochs per measurement (after warmup)")
+    ap.add_argument("--modes", type=str, default="digital,analog")
+    args = ap.parse_args()
+
+    from repro.core import device as dev
+    from repro.data import mnist
+    from repro.models.lenet import LeNetConfig
+
+    (xtr, ytr), _ = mnist.load_splits(args.n_train, 128, seed=0,
+                                      verbose=False)
+    out = {"protocol": {"batch": args.batch, "n_train": args.n_train,
+                        "epochs_timed": args.epochs,
+                        "workload": "LeNet/MNIST"}}
+    speedups = {}
+    for mode in args.modes.split(","):
+        cfg = LeNetConfig.uniform(dev.rpu_nm_bm(), mode=mode)
+        with legacy_ops():
+            legacy = bench_python_loop(cfg, xtr, ytr, args.batch,
+                                       args.epochs)
+        python = bench_python_loop(cfg, xtr, ytr, args.batch, args.epochs)
+        scan = bench_scan(cfg, xtr, ytr, args.batch, args.epochs)
+        speedup = scan / legacy
+        speedups[mode] = speedup
+        out[mode] = {
+            "legacy_steps_per_sec": legacy,
+            "python_steps_per_sec": python,
+            "scan_steps_per_sec": scan,
+            "scan_vs_legacy": speedup,
+            "scan_vs_python": scan / python,
+        }
+        print(f"[{mode:7s}] legacy {legacy:7.1f}  python {python:7.1f}  "
+              f"scan {scan:7.1f} steps/s   scan/legacy = {speedup:.2f}x",
+              flush=True)
+
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    with open(RESULTS, "w") as f:
+        json.dump(out, f, indent=1)
+    summary = "  ".join(f"{m}: {s:.2f}x" for m, s in speedups.items())
+    print(f"[bench] scan engine vs legacy path — {summary}")
+    if "digital" in speedups:
+        verdict = "PASS" if speedups["digital"] >= 2.0 else "FAIL"
+        print(f"[bench] acceptance (fp/digital >= 2x legacy): {verdict}")
+    print(f"[bench] wrote {RESULTS}")
+
+
+if __name__ == "__main__":
+    main()

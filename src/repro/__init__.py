@@ -1,0 +1,6 @@
+"""repro: RPU analog-training reproduction (Gokmen, Onen & Haensch 2017).
+
+See docs/architecture.md for the paper-concept -> module map.
+"""
+
+__version__ = "0.1.0"

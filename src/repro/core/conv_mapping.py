@@ -38,22 +38,72 @@ def _pair(v: IntPair) -> Tuple[int, int]:
     return (v, v) if isinstance(v, int) else tuple(v)
 
 
+def im2col_patches(x: Array, kernel: IntPair, stride: IntPair = 1,
+                   padding: str = "VALID", dilation: IntPair = 1) -> Array:
+    """Reference im2col via ``conv_general_dilated_patches`` (the seed
+    implementation).  Kept as the correctness oracle for :func:`im2col`
+    and for the engine benchmark's legacy-path reconstruction; do not use
+    on the hot path — it contracts against a ``C*kh*kw``-channel identity
+    kernel and its transpose dominates the backward cycle on CPU."""
+    kh, kw = _pair(kernel)
+    sh, sw = _pair(stride)
+    dh, dw = _pair(dilation)
+    return jax.lax.conv_general_dilated_patches(
+        x, filter_shape=(kh, kw), window_strides=(sh, sw), padding=padding,
+        rhs_dilation=(dh, dw),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
 def im2col(x: Array, kernel: IntPair, stride: IntPair = 1,
-           padding: str = "VALID", dilation: IntPair = 1) -> Array:
+           padding: Union[str, Sequence[Tuple[int, int]]] = "VALID",
+           dilation: IntPair = 1) -> Array:
     """Extract convolution patches.
 
     ``x``: (B, H, W, C) -> patches (B, H', W', C*kh*kw); feature order is
-    channel-major as produced by ``conv_general_dilated_patches`` with NHWC
-    spec (C outer, then kh, kw) — the same order the parameter matrix uses.
+    channel-major (C outer, then kh, kw) — the same order the parameter
+    matrix uses, and identical to what
+    ``jax.lax.conv_general_dilated_patches`` produces with NHWC specs.
+
+    Implemented as ``kh*kw`` strided slices + stack rather than the
+    dilated-patches conv (which contracts against a ``C*kh*kw``-channel
+    identity kernel — O(C^2 k^4) multiply work, and its transpose dominates
+    the backward cycle on CPU).  Slicing is pure data movement, and its
+    autodiff transpose is a cheap scatter-add col2im.
     """
     kh, kw = _pair(kernel)
     sh, sw = _pair(stride)
     dh, dw = _pair(dilation)
-    patches = jax.lax.conv_general_dilated_patches(
-        x, filter_shape=(kh, kw), window_strides=(sh, sw), padding=padding,
-        rhs_dilation=(dh, dw),
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return patches
+    b, h, w, c = x.shape
+    ekh, ekw = (kh - 1) * dh + 1, (kw - 1) * dw + 1  # effective kernel extent
+    if not isinstance(padding, str):
+        # explicit per-dim pad pairs ((top, bottom), (left, right)),
+        # as accepted by lax conv padding
+        (pt, pb), (pl, pr) = padding
+        x = jnp.pad(x, ((0, 0), (pt, pb), (pl, pr), (0, 0)))
+        b, h, w, c = x.shape
+        oh, ow = (h - ekh) // sh + 1, (w - ekw) // sw + 1
+    elif padding.upper() == "SAME":
+        oh, ow = -(-h // sh), -(-w // sw)
+        ph = max(0, (oh - 1) * sh + ekh - h)
+        pw = max(0, (ow - 1) * sw + ekw - w)
+        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                        (pw // 2, pw - pw // 2), (0, 0)))
+        b, h, w, c = x.shape
+    elif padding.upper() == "VALID":
+        oh, ow = (h - ekh) // sh + 1, (w - ekw) // sw + 1
+    else:
+        raise ValueError(f"unsupported padding {padding!r}")
+    cols = []
+    for ih in range(kh):
+        for iw in range(kw):
+            r0, c0 = ih * dh, iw * dw
+            cols.append(jax.lax.slice(
+                x, (0, r0, c0, 0),
+                (b, r0 + (oh - 1) * sh + 1, c0 + (ow - 1) * sw + 1, c),
+                (1, sh, sw, 1)))
+    patches = jnp.stack(cols, axis=-2)           # (B, H', W', kh*kw, C)
+    patches = jnp.swapaxes(patches, -1, -2)      # (B, H', W', C, kh*kw)
+    return patches.reshape(b, oh, ow, c * kh * kw)
 
 
 def kernel_matrix_from_conv(kernels: Array) -> Array:

@@ -61,6 +61,14 @@ def cp_rules(multi_pod: bool = False) -> Rules:
     return r
 
 
+def data_mesh(devices: Optional[Sequence[Any]] = None) -> Mesh:
+    """1-D mesh over all (or the given) local devices with a ``'data'``
+    axis — the DDP mesh used by the scan engine's shard_map path."""
+    import numpy as np
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    return Mesh(devs.reshape(-1), ("data",))
+
+
 # --- context -----------------------------------------------------------------
 
 class _Ctx(threading.local):

@@ -1,10 +1,12 @@
 """Production LM training driver.
 
 Composes every substrate: mesh + logical sharding rules, deterministic
-resumable data pipeline, jit'd train step (digital AdamW or analog pulse-SGD
-when ``--analog``), async sharded checkpointing, straggler watchdog,
-preemption-safe shutdown, restart-with-retry, optional gradient compression
-for the DP all-reduce.
+resumable data pipeline, scan-fused multi-step dispatch (``--engine scan``,
+default — up to ``--scan-chunk`` train steps per XLA dispatch with donated
+carries; ``--engine python`` keeps the legacy one-dispatch-per-step loop as
+the oracle), digital AdamW or analog pulse-SGD (``--analog``), async sharded
+checkpointing, straggler watchdog, preemption-safe shutdown,
+restart-with-retry, optional gradient compression for the DP all-reduce.
 
   PYTHONPATH=src python -m repro.launch.train --arch deepseek_7b \
       --smoke --steps 20 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
@@ -28,6 +30,7 @@ from repro.configs import registry
 from repro.data.tokens import SyntheticTokenSource, TokenPipelineConfig
 from repro.distributed import sharding as shd
 from repro.distributed.fault import PreemptionHandler, StragglerWatchdog
+from repro.train import engine as engine_lib
 from repro.train import lm
 
 
@@ -40,10 +43,25 @@ def build_mesh_and_rules(smoke: bool, multi_pod: bool):
     return mesh, shd.tp_fsdp_rules(multi_pod)
 
 
+def _build_batch(cfg, toks, seq):
+    """Assemble the train-step batch dict; ``toks`` is (B, S) or, for a
+    scanned chunk, (chunk, B, S) — extra streams follow the leading axes."""
+    lead = toks.shape[:-1]
+    batch_d = {"tokens": toks}
+    if cfg.family == "vlm":
+        batch_d["frontend_embeds"] = jnp.zeros(
+            (*lead, cfg.frontend_tokens, cfg.d_model), cfg.act_dtype)
+    if cfg.family == "audio":
+        batch_d["enc_embeds"] = jnp.zeros(
+            (*lead, max(seq // 2, 8), cfg.d_model), cfg.act_dtype)
+    return batch_d
+
+
 def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
           analog: bool = False, ckpt_dir: Optional[str] = None,
           ckpt_every: int = 50, multi_pod: bool = False,
-          lr: float = 3e-4, log_every: int = 1, seed: int = 0):
+          lr: float = 3e-4, log_every: int = 1, seed: int = 0,
+          engine: str = "scan", scan_chunk: int = 10):
     import dataclasses
     cfg = registry.get_config(arch, smoke=smoke)
     if analog:
@@ -56,8 +74,12 @@ def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
         vocab=cfg.vocab, seq_len=seq, global_batch=batch, seed=seed))
 
     opt = lm.default_optimizer(cfg, lr)
-    step_fn, _ = lm.make_train_step(cfg, opt)
-    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    if engine == "scan":
+        multi_fn, _ = lm.make_scan_train_step(cfg, opt)
+        multi_fn = jax.jit(multi_fn, donate_argnums=(0, 1))
+    else:
+        step_fn, _ = lm.make_train_step(cfg, opt)
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
 
     watchdog = StragglerWatchdog()
     preempt = PreemptionHandler().install()
@@ -80,36 +102,51 @@ def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
                 print(f"[train] restored step {latest}")
         return params, opt_state, start
 
+    key_base = jax.random.key(seed + 1)
     ctx = shd.use_sharding(mesh, rules) if mesh is not None else _null()
     with ctx:
         params, opt_state, start = init_state()
         losses = []
-        for step in range(start, steps):
+        step = start
+        while step < steps:
             t0 = time.time()
-            toks = jnp.asarray(pipeline.batch_at(step))
-            batch_d = {"tokens": toks}
-            if cfg.family == "vlm":
-                batch_d["frontend_embeds"] = jnp.zeros(
-                    (toks.shape[0], cfg.frontend_tokens, cfg.d_model),
-                    cfg.act_dtype)
-            if cfg.family == "audio":
-                batch_d["enc_embeds"] = jnp.zeros(
-                    (toks.shape[0], max(seq // 2, 8), cfg.d_model),
-                    cfg.act_dtype)
-            key = jax.random.fold_in(jax.random.key(seed + 1), step)
-            params, opt_state, metrics = step_fn(params, opt_state,
-                                                 batch_d, key)
-            loss = float(metrics["loss"])
-            losses.append(loss)
-            rep = watchdog.observe(step, time.time() - t0)
-            if step % log_every == 0:
+            if engine == "scan":
+                # Scanned chunk: one dispatch for up to ``scan_chunk``
+                # steps, clipped (only when checkpointing) so checkpoints
+                # still land exactly on the ``ckpt_every`` cadence.
+                chunk = min(scan_chunk, steps - step)
+                if ckpt and ckpt_every > 0:
+                    chunk = min(chunk, ckpt_every - (step % ckpt_every))
+                toks = jnp.asarray(np.stack(
+                    [pipeline.batch_at(i)
+                     for i in range(step, step + chunk)]))
+                batch_d = _build_batch(cfg, toks, seq)
+                keys = engine_lib.fold_in_keys(
+                    key_base, jnp.arange(step, step + chunk))
+                params, opt_state, metrics = multi_fn(
+                    params, opt_state, batch_d, keys)
+                chunk_losses = np.asarray(metrics["loss"]).tolist()
+            else:
+                chunk = 1
+                toks = jnp.asarray(pipeline.batch_at(step))
+                batch_d = _build_batch(cfg, toks, seq)
+                key = jax.random.fold_in(key_base, step)
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     batch_d, key)
+                chunk_losses = [float(metrics["loss"])]
+            losses.extend(chunk_losses)
+            loss = chunk_losses[-1]
+            step += chunk
+            rep = watchdog.observe(step - 1, (time.time() - t0) / chunk)
+            if (step - chunk) % log_every == 0 or chunk > 1:
                 flag = " STRAGGLER" if rep.is_straggler else ""
-                print(f"[train {arch}] step {step} loss {loss:.4f} "
-                      f"({rep.step_time * 1e3:.0f} ms){flag}", flush=True)
-            if ckpt and ((step + 1) % ckpt_every == 0
+                print(f"[train {arch}] step {step - 1} loss {loss:.4f} "
+                      f"({rep.step_time * 1e3:.0f} ms/step){flag}",
+                      flush=True)
+            if ckpt and (step % ckpt_every == 0
                          or preempt.preemption_requested()
-                         or step + 1 == steps):
-                ckpt.save(step + 1, (params, opt_state),
+                         or step == steps):
+                ckpt.save(step, (params, opt_state),
                           {"arch": arch, "loss": loss})
             if preempt.preemption_requested():
                 print("[train] preemption requested -> checkpointed, exiting")
@@ -139,11 +176,17 @@ def main():
     ap.add_argument("--ckpt-dir", type=str, default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--engine", choices=("scan", "python"), default="scan",
+                    help="scan: fused multi-step dispatch; python: legacy "
+                         "per-step loop (correctness oracle)")
+    ap.add_argument("--scan-chunk", type=int, default=10,
+                    help="steps fused per dispatch with --engine scan")
     args = ap.parse_args()
     res = train(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
                 smoke=args.smoke, analog=args.analog,
                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-                multi_pod=args.multi_pod, lr=args.lr)
+                multi_pod=args.multi_pod, lr=args.lr, engine=args.engine,
+                scan_chunk=args.scan_chunk)
     print(f"[train] done; final loss {res['final_loss']:.4f}")
 
 

@@ -63,13 +63,25 @@ def init(key: Array, cfg: LeNetConfig) -> Dict[str, TileState]:
 
 
 def _maxpool2(x: Array) -> Array:
-    return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    # Reshape-based 2x2/2 pooling: identical to reduce_window forward, but
+    # its autodiff transpose is a cheap mask instead of SelectAndScatter
+    # (which dominates the backward cycle on XLA:CPU).
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
 
 
-def apply(params: Dict[str, TileState], images: Array, key: Array,
+def apply(params: Dict[str, TileState], images: Array, key: Optional[Array],
           cfg: LeNetConfig) -> Array:
-    """images (B, 28, 28, 1) -> logits (B, 10)."""
+    """images (B, 28, 28, 1) -> logits (B, 10).
+
+    ``key`` seeds the analog read/update noise; it may be ``None`` in
+    digital mode (the FP path draws no randomness), which lets the scan
+    engine feed batched per-step keys only where they are consumed.
+    """
+    if key is None:
+        if cfg.mode != "digital":
+            raise ValueError("analog mode requires a PRNG key")
+        key = jax.random.key(0)
     ks = jax.random.split(key, 4)
     lr = cfg.lr
     mode = cfg.mode

@@ -31,8 +31,13 @@ def init(key, cfg: ModelConfig, d_ff: int = 0):
 
 
 def apply(p, x: Array, cfg: ModelConfig, akey=None) -> Array:
+    # One batched split instead of three serial fold_ins: the scan engine
+    # feeds a fresh key per step, so per-layer keys are pure derivation and
+    # a single threefry call covers all three dense reads.
+    ks = None if akey is None else jax.random.split(akey, 3)
+
     def dense(name, xx, i):
-        k = None if akey is None else jax.random.fold_in(akey, i)
+        k = None if ks is None else ks[i]
         return L.dense_apply(p[name], xx, analog=cfg.analog, key=k)
 
     h = jax.nn.silu(dense("wg", x, 0)) * dense("wi", x, 1)

@@ -5,6 +5,14 @@ e.g. analog-tile PRNG seeds — carry scalar zero sentinels) so that
 ``jax.tree_util.tree_map`` over (params, grads, state...) never hits a
 structure mismatch, and sharding rules derived from the param tree transfer
 to the optimizer state unchanged.
+
+Every state is also a **scan-carry-safe pytree**: all leaves are concrete
+arrays with a stable shape/dtype across ``update`` calls (no Python
+scalars, ``None`` placeholders or float0 leaves), so ``(params, opt_state)``
+can be threaded as the carry of ``jax.lax.scan`` and donated via
+``donate_argnums`` by the scan-fused training engine
+(:mod:`repro.train.engine`).  ``assert_scan_carry_safe`` checks the
+invariant at engine-construction time.
 """
 
 from __future__ import annotations
@@ -43,6 +51,24 @@ def _skippable(p, g) -> bool:
 
 def _zeros_like_or_sentinel(p):
     return jnp.zeros(p.shape, jnp.float32) if _is_float(p) else jnp.zeros(())
+
+
+def assert_scan_carry_safe(state: OptState, what: str = "optimizer state"):
+    """Raise ``TypeError`` unless every leaf of ``state`` is a concrete
+    array value (has a non-float0 dtype).  Python scalars, ``None``
+    placeholders and float0 leaves would change aval under tracing or break
+    buffer donation when the state is carried through ``jax.lax.scan``.
+    ``None`` is normally pytree *structure*, not a leaf — flatten with it
+    as a leaf so placeholder Nones are caught too."""
+    flat = jax.tree_util.tree_flatten_with_path(
+        state, is_leaf=lambda x: x is None)[0]
+    for path, leaf in flat:
+        dt = getattr(leaf, "dtype", None)
+        if dt is None or dt == jax.dtypes.float0:
+            name = jax.tree_util.keystr(path) or "<root>"
+            raise TypeError(
+                f"{what} leaf {name} = {leaf!r} is not scan-carry-safe "
+                f"(expected an array leaf, got {type(leaf).__name__})")
 
 
 def analog_sgd() -> Optimizer:

@@ -1,1 +1,2 @@
-"""Training drivers: CNN repro trainer + distributed LM train step."""
+"""Training drivers: CNN repro trainer, distributed LM train step, and the
+scan-fused device-resident epoch engine (:mod:`repro.train.engine`)."""

@@ -3,6 +3,15 @@
 Runs the Results-section protocol: SGD, fixed eta, epoch-wise test-error
 tracking, analog or FP mode.  Emits a JSON-serialisable history so the
 benchmark harness (one per paper figure) can aggregate runs.
+
+Two interchangeable engines drive the epochs:
+
+* ``engine="scan"`` (default) — the scan-fused, device-resident epoch
+  program from :mod:`repro.train.engine`: one XLA dispatch per epoch,
+  donated (params, opt_state) carry, optional shard_map data parallelism.
+* ``engine="python"`` — the legacy per-step Python loop, kept as the
+  correctness oracle; both engines use the identical fold_in key schedule
+  and produce the same parameters (pinned by tests/test_train_engine.py).
 """
 
 from __future__ import annotations
@@ -17,11 +26,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lenet
-from repro.optim import analog_sgd, sgd
+from repro.optim import analog_sgd, assert_scan_carry_safe, sgd
 
 
-def make_train_step(cfg: lenet.LeNetConfig):
-    opt = analog_sgd() if cfg.mode == "analog" else sgd(cfg.lr)
+def make_train_step(cfg: lenet.LeNetConfig, opt=None):
+    opt = opt or (analog_sgd() if cfg.mode == "analog" else sgd(cfg.lr))
 
     @jax.jit
     def step(params, opt_state, images, labels, key):
@@ -34,18 +43,17 @@ def make_train_step(cfg: lenet.LeNetConfig):
 
 
 def make_eval(cfg: lenet.LeNetConfig, batch: int = 256):
-    @jax.jit
-    def eval_batch(params, images, labels, key):
-        return lenet.accuracy(params, images, labels, key, cfg)
+    """Scan-fused test-error evaluation: one dispatch for the whole split.
+
+    Key schedule (``fold_in(key, batch_start_offset)``) matches the
+    historical per-batch Python loop, so reported errors are unchanged for
+    batch-aligned splits.
+    """
+    from repro.train import engine as eng
+    fused = eng.make_cnn_eval_fn(cfg, batch=batch)
 
     def evaluate(params, xs, ys, key) -> float:
-        accs, ns = [], []
-        for i in range(0, len(xs), batch):
-            kb = jax.random.fold_in(key, i)
-            xb, yb = xs[i:i + batch], ys[i:i + batch]
-            accs.append(float(eval_batch(params, xb, yb, kb)))
-            ns.append(len(xb))
-        return 1.0 - float(np.average(accs, weights=ns))
+        return float(fused(params, jnp.asarray(xs), jnp.asarray(ys), key))
 
     return evaluate
 
@@ -53,8 +61,20 @@ def make_eval(cfg: lenet.LeNetConfig, batch: int = 256):
 def train(cfg: lenet.LeNetConfig, *, epochs: int = 15, batch: int = 8,
           n_train: int = 8192, n_test: int = 2048, seed: int = 0,
           log_path: Optional[str] = None, verbose: bool = True,
-          eval_every_epoch: bool = True) -> Dict:
-    """Train per the paper's protocol; returns {test_error: [...], ...}."""
+          eval_every_epoch: bool = True, engine: str = "scan",
+          data_parallel: bool = False, return_params: bool = False) -> Dict:
+    """Train per the paper's protocol; returns {test_error: [...], ...}.
+
+    ``engine``: ``"scan"`` (fused epoch program, default) or ``"python"``
+    (legacy per-step loop — the correctness oracle).  ``data_parallel``
+    turns on the shard_map batch split (scan engine only).
+    ``return_params`` adds the final params pytree under ``"params"``
+    (not JSON-dumped) for parity testing.
+    """
+    if engine not in ("scan", "python"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if data_parallel and engine != "scan":
+        raise ValueError("data_parallel requires engine='scan'")
     from repro.data import mnist
     (xtr, ytr), (xte, yte) = mnist.load_splits(n_train, n_test, seed=seed,
                                                verbose=verbose)
@@ -62,20 +82,35 @@ def train(cfg: lenet.LeNetConfig, *, epochs: int = 15, batch: int = 8,
     k_init, k_data, k_train, k_eval = jax.random.split(key, 4)
 
     params = lenet.init(k_init, cfg)
-    step, opt = make_train_step(cfg)
+    opt = analog_sgd() if cfg.mode == "analog" else sgd(cfg.lr)
     opt_state = opt.init(params)
     evaluate = make_eval(cfg)
 
     steps_per_epoch = len(xtr) // batch
+    if engine == "scan":
+        from repro.train import engine as eng
+        assert_scan_carry_safe(opt_state)   # fail fast before the scan jit
+        run_epoch = eng.make_cnn_epoch_fn(cfg, opt, batch=batch,
+                                          data_parallel=data_parallel)
+        xtr_d, ytr_d = jnp.asarray(xtr), jnp.asarray(ytr)
+    else:
+        step, _ = make_train_step(cfg, opt)
+
     history: List[float] = []
     t0 = time.time()
     for epoch in range(epochs):
-        perm = np.asarray(jax.random.permutation(
-            jax.random.fold_in(k_data, epoch), len(xtr)))
-        for s in range(steps_per_epoch):
-            idx = perm[s * batch:(s + 1) * batch]
-            ks = jax.random.fold_in(k_train, epoch * steps_per_epoch + s)
-            params, opt_state = step(params, opt_state, xtr[idx], ytr[idx], ks)
+        if engine == "scan":
+            params, opt_state = run_epoch(params, opt_state, xtr_d, ytr_d,
+                                          k_data, k_train, epoch)
+        else:
+            perm = np.asarray(jax.random.permutation(
+                jax.random.fold_in(k_data, epoch), len(xtr)))
+            for s in range(steps_per_epoch):
+                idx = perm[s * batch:(s + 1) * batch]
+                ks = jax.random.fold_in(k_train,
+                                        epoch * steps_per_epoch + s)
+                params, opt_state = step(params, opt_state,
+                                         xtr[idx], ytr[idx], ks)
         if eval_every_epoch or epoch == epochs - 1:
             err = evaluate(params, xte, yte,
                            jax.random.fold_in(k_eval, epoch))
@@ -86,16 +121,22 @@ def train(cfg: lenet.LeNetConfig, *, epochs: int = 15, batch: int = 8,
                       flush=True)
             if log_path:
                 _dump(log_path, cfg, history, epochs, batch, n_train, seed)
+    wallclock = time.time() - t0
     result = {
         "test_error": history,
         "final_error": history[-1] if history else None,
         "mean_last5": float(np.mean(history[-5:])) if history else None,
         "std_last5": float(np.std(history[-5:])) if history else None,
-        "wallclock_s": time.time() - t0,
+        "wallclock_s": wallclock,
+        "engine": engine,
+        "steps_per_sec": epochs * steps_per_epoch / wallclock
+        if wallclock > 0 else None,
     }
     if log_path:
         _dump(log_path, cfg, history, epochs, batch, n_train, seed,
               extra=result)
+    if return_params:
+        result["params"] = params
     return result
 
 

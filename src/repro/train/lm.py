@@ -61,6 +61,21 @@ def make_train_step(cfg: ModelConfig, opt: Optional[Optimizer] = None):
     return train_step, opt
 
 
+def make_scan_train_step(cfg: ModelConfig, opt: Optional[Optimizer] = None):
+    """Scan-fused multi-step runner (see :mod:`repro.train.engine`).
+
+    Returns ``(multi_step, opt)`` where ``multi_step(params, opt_state,
+    batches, keys) -> (params, opt_state, metrics)`` executes one scanned
+    chunk of steps in a single dispatch: every leaf of ``batches`` and
+    ``keys`` carries a leading chunk axis and metrics come back stacked
+    along it.  Jit with ``donate_argnums=(0, 1)`` so the (params,
+    opt_state) carry buffers are reused in place across chunks.
+    """
+    from repro.train.engine import scan_steps
+    step, opt = make_train_step(cfg, opt)
+    return scan_steps(step), opt
+
+
 def init_train_state(key, cfg: ModelConfig, opt: Optional[Optimizer] = None):
     """Concrete params + optimizer state (smoke tests / real training)."""
     opt = opt or default_optimizer(cfg)

@@ -5,6 +5,9 @@ Eqs. 3-4 invariants — plus unit tests for update management.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import management

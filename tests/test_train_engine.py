@@ -1,0 +1,156 @@
+"""Scan-fused training engine: parity with the legacy Python loop, scan-carry
+safety of the optimizer states, the shard_map data-parallel path, and the
+slice-based im2col against its conv-patches oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conv_mapping as cm
+from repro.core import device as dev
+from repro.models import lenet
+from repro.optim import (adamw, analog_sgd, assert_scan_carry_safe, momentum,
+                         sgd)
+
+LAYERS = ("K1", "K2", "W3", "W4")
+
+
+# ---------------------------------------------------------------------------
+# Engine parity: scan == python, bit for bit, analog and fp
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["analog", "digital"])
+def test_engine_parity_two_epochs(mode):
+    """Scan engine and legacy loop share the fold_in key schedule: after 2
+    epochs from the same seed the parameters must be identical."""
+    from repro.train import cnn
+    cfg = lenet.LeNetConfig.uniform(dev.rpu_nm_bm(), mode=mode)
+    kw = dict(epochs=2, batch=8, n_train=256, n_test=64, seed=0,
+              verbose=False, eval_every_epoch=False, return_params=True)
+    r_py = cnn.train(cfg, engine="python", **kw)
+    r_sc = cnn.train(cfg, engine="scan", **kw)
+    for name in LAYERS:
+        np.testing.assert_allclose(
+            np.asarray(r_py["params"][name].w),
+            np.asarray(r_sc["params"][name].w),
+            rtol=0, atol=0, err_msg=f"{mode}/{name}")
+    assert r_py["final_error"] == r_sc["final_error"]
+
+
+def test_engine_rejects_bad_flags():
+    from repro.train import cnn
+    cfg = lenet.LeNetConfig.uniform(dev.rpu_baseline(), mode="digital")
+    with pytest.raises(ValueError):
+        cnn.train(cfg, engine="fortran", epochs=1, n_train=64, n_test=32,
+                  verbose=False)
+    with pytest.raises(ValueError):
+        cnn.train(cfg, engine="python", data_parallel=True, epochs=1,
+                  n_train=64, n_test=32, verbose=False)
+
+
+def test_data_parallel_path_trains():
+    """The shard_map batch split must run and learn (exact on 1 device for
+    digital mode: the summed loss makes the psum'd grads full-batch)."""
+    from repro.train import cnn
+    cfg = lenet.LeNetConfig.uniform(dev.rpu_nm_bm(), mode="digital")
+    r = cnn.train(cfg, engine="scan", data_parallel=True, epochs=2, batch=8,
+                  n_train=256, n_test=64, verbose=False)
+    assert r["final_error"] < 0.9
+
+
+# ---------------------------------------------------------------------------
+# LM multi-step scan parity
+# ---------------------------------------------------------------------------
+
+def test_lm_scan_steps_match_python_loop():
+    import dataclasses as dc
+    from repro.configs import registry
+    from repro.train import lm
+    from repro.data.tokens import SyntheticTokenSource, TokenPipelineConfig
+
+    cfg = registry.get_config("deepseek_7b", smoke=True)
+    pipeline = SyntheticTokenSource(TokenPipelineConfig(
+        vocab=cfg.vocab, seq_len=32, global_batch=2, seed=0))
+    opt = lm.default_optimizer(cfg)
+    params, opt_state, _ = lm.init_train_state(jax.random.key(0), cfg, opt)
+
+    step, _ = lm.make_train_step(cfg, opt)
+    step = jax.jit(step)
+    key_base = jax.random.key(1)
+    p_ref, s_ref = params, opt_state
+    losses_ref = []
+    for i in range(3):
+        b = {"tokens": jnp.asarray(pipeline.batch_at(i))}
+        p_ref, s_ref, m = step(p_ref, s_ref, b,
+                               jax.random.fold_in(key_base, i))
+        losses_ref.append(float(m["loss"]))
+
+    multi, _ = lm.make_scan_train_step(cfg, opt)
+    toks = jnp.asarray(np.stack([pipeline.batch_at(i) for i in range(3)]))
+    keys = jax.vmap(lambda i: jax.random.fold_in(key_base, i))(jnp.arange(3))
+    p_sc, s_sc, metrics = jax.jit(multi)(params, opt_state,
+                                         {"tokens": toks}, keys)
+    np.testing.assert_allclose(np.asarray(metrics["loss"]), losses_ref,
+                               rtol=1e-6)
+    leaves_ref = jax.tree_util.tree_leaves(p_ref)
+    leaves_sc = jax.tree_util.tree_leaves(p_sc)
+    for a, b in zip(leaves_ref, leaves_sc):
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer states are scan-carry-safe pytrees
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make_opt", [analog_sgd, lambda: sgd(0.1),
+                                      lambda: momentum(0.1),
+                                      lambda: adamw(1e-3)],
+                         ids=["analog_sgd", "sgd", "momentum", "adamw"])
+def test_optimizer_state_is_scan_carry_safe(make_opt):
+    opt = make_opt()
+    params = {"w": jnp.ones((4, 3)), "seed": jnp.zeros((), jnp.int32)}
+    state = opt.init(params)
+    assert_scan_carry_safe(state)
+
+    grads = {"w": jnp.full((4, 3), 0.1), "seed": jnp.zeros(())}
+
+    def body(carry, _):
+        p, s = carry
+        p, s = opt.update(grads, s, p)
+        return (p, s), ()
+
+    (p, s), _ = jax.lax.scan(body, (params, state), None, length=3)
+    assert p["w"].shape == (4, 3)
+    assert float(jnp.max(jnp.abs(p["w"] - 1.0))) > 0.0
+
+
+def test_assert_scan_carry_safe_rejects_bad_leaves():
+    with pytest.raises(TypeError):
+        assert_scan_carry_safe({"count": 0})          # python scalar
+    with pytest.raises(TypeError):
+        assert_scan_carry_safe(
+            {"g": np.zeros((2,), dtype=jax.dtypes.float0)})  # float0 leaf
+    with pytest.raises(TypeError):
+        assert_scan_carry_safe({"m": None})           # None placeholder
+
+
+# ---------------------------------------------------------------------------
+# im2col rewrite vs the conv-patches oracle (no hypothesis required)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "shape,k,stride,padding,dilation",
+    [((2, 12, 12, 3), 3, 1, "VALID", 1),
+     ((1, 28, 28, 1), 5, 1, "VALID", 1),
+     ((2, 11, 13, 4), 3, 2, "SAME", 1),
+     ((2, 14, 14, 2), 3, 1, "SAME", 2),
+     ((3, 10, 10, 5), (3, 2), (2, 1), "VALID", 1)])
+def test_im2col_matches_patches_oracle(shape, k, stride, padding, dilation):
+    x = jax.random.normal(jax.random.key(0), shape)
+    got = cm.im2col(x, k, stride, padding, dilation)
+    want = cm.im2col_patches(x, k, stride, padding, dilation)
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
