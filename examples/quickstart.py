@@ -31,7 +31,7 @@ def main():
     clean = delta @ w_eff
     z_raw, _ = analog_mvm_reference(tile.w, delta, jax.random.key(2), cfg,
                                     transpose=True)
-    z_nm = management.with_management(
+    z_nm, _ = management.with_management(
         lambda x, k: analog_mvm_reference(tile.w, x, k, cfg, transpose=True),
         delta, jax.random.key(2),
         cfg.with_management(nm=True, bm=False), backward=True)
@@ -45,7 +45,7 @@ def main():
     # --- 2) bounds: a large forward signal ----------------------------------
     big_x = 30.0 * jnp.ones((1, 16))
     y_raw, sat = analog_mvm_reference(tile.w, big_x, jax.random.key(3), cfg)
-    y_bm = management.with_management(
+    y_bm, _ = management.with_management(
         lambda x, k: analog_mvm_reference(tile.w, x, k, cfg),
         big_x, jax.random.key(3),
         cfg.with_management(nm=False, bm=True), backward=False)

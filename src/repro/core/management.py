@@ -8,6 +8,21 @@ prescribes.  They are written as pure functions over an ``analog_mvm``
 callable so the same code wraps the pure-jnp reference tile, the Pallas
 kernels, and sharded multi-pod tiles.
 
+Scale threading
+---------------
+NM and BM *compose*: NM normalizes the input once, then BM halves on top of
+that scale until the integrator stops clipping.  The composition is realised
+as ONE combined per-vector digital scale ``s = s_nm * 2^n`` threaded through
+the *raw* ``analog_mvm``::
+
+    y = [ W (x / s) + sigma ] * s ,   s = s_nm * 2^n
+
+``s_nm = max|x|`` is computed exactly once (never re-derived from an already
+rescaled input — recomputing it inside the BM retry cancels the halving and
+the array would see the same normalized vector on every retry), and the BM
+loop doubles ``s`` per still-saturated vector so each retry genuinely halves
+the physical array input.
+
 Conventions
 -----------
 ``analog_mvm(x, key) -> (y, saturated)`` computes the *physical* array read
@@ -19,7 +34,7 @@ every call — a BM retry is a *new* physical read.
 
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +45,10 @@ Array = jax.Array
 AnalogMVM = Callable[[Array, Array], Tuple[Array, Array]]
 
 _EPS = 1e-12
+
+#: Input down-scale of the second (unconditional) two-phase BM read.
+#: Equivalent to the paper's iterative loop at n=4 (effective bound 16*alpha).
+TWO_PHASE_SCALE = 16.0
 
 
 # ---------------------------------------------------------------------------
@@ -63,10 +82,24 @@ def with_noise_management(analog_mvm: AnalogMVM, x: Array,
 # Bound management — Eq. (4)
 # ---------------------------------------------------------------------------
 
+def _vector_scale(x: Array, init_scale: Optional[Array]) -> Array:
+    """Initial per-vector digital scale, shape ``x.shape[:-1]``."""
+    if init_scale is None:
+        return jnp.ones(x.shape[:-1], dtype=x.dtype)
+    return jnp.broadcast_to(
+        init_scale.reshape(*x.shape[:-1], -1)[..., 0], x.shape[:-1]
+    ).astype(x.dtype)
+
+
 def with_bound_management(analog_mvm: AnalogMVM, x: Array, key: Array,
-                          max_iters: int) -> Tuple[Array, Array]:
-    """y = [ W (x / 2^n) + sigma ] * 2^n with n chosen per vector so that the
-    read no longer saturates (Eq. 4) — effective bound 2^n * alpha.
+                          max_iters: int, *,
+                          init_scale: Optional[Array] = None
+                          ) -> Tuple[Array, Array]:
+    """y = [ W (x / s) + sigma ] * s with ``s = s0 * 2^n`` chosen per vector
+    so that the read no longer saturates (Eq. 4) — effective bound
+    ``2^n * alpha``.  ``init_scale`` (``s0``, default 1) is the NM scale when
+    the two techniques compose; the doubling applies ON TOP of it, so every
+    retry halves the input the physical array actually sees.
 
     The haloing loop re-reads the array with halved inputs until no output
     channel of that vector is clipped (fresh analog noise per retry — each
@@ -76,6 +109,9 @@ def with_bound_management(analog_mvm: AnalogMVM, x: Array, key: Array,
     program we re-read *all* vectors with their per-vector scale and keep the
     final read; this is distribution-equivalent to retrying only saturated
     ones (DESIGN.md section 8).
+
+    Returns ``(y, residual_sat)``; ``residual_sat`` flags vectors still
+    clipped when ``max_iters`` ran out.
     """
 
     def body(state):
@@ -89,61 +125,74 @@ def with_bound_management(analog_mvm: AnalogMVM, x: Array, key: Array,
         n_iter, _scale, _y, sat, _k = state
         return jnp.logical_and(jnp.any(sat), n_iter < max_iters)
 
+    scale0 = _vector_scale(x, init_scale)
     key, k0 = jax.random.split(key)
-    y0, sat0 = analog_mvm(x, k0)
-    scale0 = jnp.ones(sat0.shape, dtype=x.dtype)
+    y0, sat0 = analog_mvm(x / scale0[..., None], k0)
+    y0 = y0 * scale0[..., None]
     _, _, y, sat, _ = jax.lax.while_loop(
         cond, body, (jnp.zeros((), jnp.int32), scale0, y0, sat0, key))
     return y, sat
 
 
 def with_bound_management_two_phase(analog_mvm: AnalogMVM, x: Array,
-                                    key: Array) -> Tuple[Array, Array]:
+                                    key: Array, *,
+                                    init_scale: Optional[Array] = None
+                                    ) -> Tuple[Array, Array]:
     """Beyond-paper BM (DESIGN.md §9): one unconditional retry at 1/16 input
     scale replaces the data-dependent halve-and-retry loop.
 
-    y = read(x); y16 = read(x/16) * 16; pick y16 where the first read
-    saturated.  Effective bound 16*alpha (the paper's loop at n=4) with a
-    *fixed two-read latency* — removes the variable-latency hazard in
-    pipelined layer execution and the while-loop from the lowered program
-    (SPMD-friendlier, no retry bubble).  SNR for recovered vectors equals
-    the iterative scheme's at n=4.  Validated for accuracy in
-    benchmarks/bm_two_phase_check.py.
+    y = read(x/s0)*s0; y16 = read(x/(16*s0)) * 16*s0; pick y16 where the
+    first read saturated.  ``s0`` is the NM scale when NM composes (computed
+    once by the caller, NOT re-derived here).  Effective bound 16*alpha (the
+    paper's loop at n=4) with a *fixed two-read latency* — removes the
+    variable-latency hazard in pipelined layer execution and the while-loop
+    from the lowered program (SPMD-friendlier, no retry bubble).  SNR for
+    recovered vectors equals the iterative scheme's at n=4.  Validated for
+    accuracy in benchmarks/bm_two_phase_check.py.
+
+    Returns ``(y, residual_sat)``: ``residual_sat = sat1 & sat2`` flags
+    vectors whose 1/16 read *also* clipped — their selected output is still a
+    (rescaled) clipped value and callers must not treat it as recovered.
     """
+    s0 = _vector_scale(x, init_scale)[..., None]
     k1, k2 = jax.random.split(key)
-    y1, sat1 = analog_mvm(x, k1)
-    y2, sat2 = analog_mvm(x / 16.0, k2)
-    y = jnp.where(sat1[..., None], y2 * 16.0, y1)
+    y1, sat1 = analog_mvm(x / s0, k1)
+    y2, sat2 = analog_mvm(x / (TWO_PHASE_SCALE * s0), k2)
+    y = jnp.where(sat1[..., None], y2 * TWO_PHASE_SCALE, y1) * s0
     return y, jnp.logical_and(sat1, sat2)
 
 
 def with_management(analog_mvm: AnalogMVM, x: Array, key: Array,
-                    cfg: RPUConfig, *, backward: bool) -> Array:
-    """Compose NM and BM around one analog MVM per the config flags.
+                    cfg: RPUConfig, *, backward: bool
+                    ) -> Tuple[Array, Array]:
+    """Compose NM and BM around one managed analog read per the config flags.
 
-    NM wraps *inside* BM: the NM scale normalises the input once; BM then
-    halves on top of it when outputs still saturate.  The composition is the
-    digital wrapper the paper describes (both are simple rescalings).
+    The NM scale is computed here EXACTLY ONCE from the unscaled input and
+    threaded into BM as the initial digital scale; BM's doubling then applies
+    on top (``s = s_nm * 2^n``) so the halving actually reaches the array.
+    ``analog_mvm`` must be the *raw* physical read — never pre-wrapped with
+    NM, which would re-normalise every retry and cancel BM (the composition
+    bug this layout exists to prevent).
+
+    Returns ``(y, residual_sat)`` where ``residual_sat`` marks vectors whose
+    output is still clipped after management (BM retries exhausted, or the
+    two-phase 1/16 read also saturated).  Without BM the flag is the raw
+    per-vector saturation of the single read.
     """
     use_nm = cfg.noise_management and (backward or cfg.nm_forward)
-
-    mvm = analog_mvm
-    if use_nm:
-        inner = mvm
-
-        def mvm(xx, kk):  # noqa: ANN001 - local closure
-            s = nm_scale(xx)
-            y, sat = inner(xx / s, kk)
-            return y * s, sat
+    s_nm = nm_scale(x) if use_nm else None
 
     if cfg.bound_management and cfg.out_bound != float("inf"):
         if cfg.bm_mode == "two_phase":
-            y, _ = with_bound_management_two_phase(mvm, x, key)
-        else:
-            y, _ = with_bound_management(mvm, x, key, cfg.bm_max_iters)
-    else:
-        y, _ = mvm(x, key)
-    return y
+            return with_bound_management_two_phase(
+                analog_mvm, x, key, init_scale=s_nm)
+        return with_bound_management(
+            analog_mvm, x, key, cfg.bm_max_iters, init_scale=s_nm)
+
+    if use_nm:
+        y, sat = analog_mvm(x / s_nm, key)
+        return y * s_nm, sat
+    return analog_mvm(x, key)
 
 
 # ---------------------------------------------------------------------------

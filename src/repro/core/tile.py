@@ -194,41 +194,88 @@ def analog_mvm_reference(w: Array, x: Array, key: jax.Array, cfg: RPUConfig,
 # Managed tile cycles (forward / backward)
 # ---------------------------------------------------------------------------
 
+def _bm_is_iterative(cfg: RPUConfig) -> bool:
+    """True when BM runs the data-dependent halve-and-retry while_loop."""
+    return (cfg.bound_management and cfg.out_bound != float("inf")
+            and cfg.bm_mode != "two_phase")
+
+
+def managed_mvm_reference(w: Array, x: Array, key: jax.Array, cfg: RPUConfig,
+                          *, transpose: bool = False,
+                          backward: bool = False) -> Tuple[Array, Array]:
+    """Pure-jnp managed read: NM scale (once) + BM over raw physical reads.
+
+    This is the oracle for ``kernels.managed_mvm_pallas`` — same key
+    discipline, same counter-hash noise per read, same select-on-saturation.
+    Returns ``(y_phys, residual_sat)`` on *physical* output channels (the
+    #_d replica average is the caller's digital step).
+    """
+    def mvm(xx, kk):
+        return analog_mvm_reference(w, xx, kk, cfg, transpose=transpose)
+
+    return management.with_management(mvm, x, key, cfg, backward=backward)
+
+
+def _replica_mean(y_phys: Array, d: int) -> Array:
+    if d == 1:
+        return y_phys
+    out_f = y_phys.shape[-1] // d
+    return jnp.mean(y_phys.reshape(*y_phys.shape[:-1], d, out_f), axis=-2)
+
+
 def tile_forward(state: TileState, x: Array, key: jax.Array,
-                 cfg: RPUConfig) -> Array:
-    """Forward cycle ``y = W_eff x`` with NM/BM management + replica average."""
+                 cfg: RPUConfig, *, return_sat: bool = False):
+    """Forward cycle ``y = W_eff x`` with NM/BM management + replica average.
+
+    With ``cfg.use_pallas`` and a fixed-latency BM mode (off or two-phase)
+    the whole managed read — NM scale, both BM reads, select, clip and the
+    #_d replica average — is one fused Pallas launch; the iterative BM
+    while_loop instead wraps one raw-read kernel launch per retry.
+
+    ``return_sat`` additionally returns the per-vector residual-saturation
+    flag (True where management could not recover an unclipped read).
+    """
     d = cfg.devices_per_weight
+
+    if cfg.use_pallas and not _bm_is_iterative(cfg):
+        from repro.kernels import ops as kops
+        y, sat = kops.managed_mvm(state.w, x, key, cfg, transpose=False,
+                                  backward=False)
+        return (y, sat) if return_sat else y
 
     def mvm(xx, kk):
         return analog_mvm(state.w, xx, kk, cfg, transpose=False)
 
-    y_phys = management.with_management(mvm, x, key, cfg, backward=False)
-    if d == 1:
-        return y_phys
-    out_f = state.w.shape[0] // d
-    return jnp.mean(
-        y_phys.reshape(*y_phys.shape[:-1], d, out_f), axis=-2)
+    y_phys, sat = management.with_management(mvm, x, key, cfg, backward=False)
+    y = _replica_mean(y_phys, d)
+    return (y, sat) if return_sat else y
 
 
 def tile_backward(state: TileState, delta: Array, key: jax.Array,
-                  cfg: RPUConfig) -> Array:
+                  cfg: RPUConfig, *, return_sat: bool = False):
     """Backward cycle ``z = W_eff^T delta`` (transpose read, NM on inputs).
 
     With multi-device mapping the error vector drives all #_d replica row
     blocks simultaneously; the analog column currents sum over replicas and
-    the digital domain divides by #_d.
+    the digital domain divides by #_d.  Routing mirrors ``tile_forward``.
     """
     d = cfg.devices_per_weight
     if d > 1:
         delta = jnp.concatenate([delta] * d, axis=-1)  # (..., #_d * out_f)
 
-    def mvm(dd, kk):
-        return analog_mvm(state.w, dd, kk, cfg, transpose=True)
+    if cfg.use_pallas and not _bm_is_iterative(cfg):
+        from repro.kernels import ops as kops
+        z, sat = kops.managed_mvm(state.w, delta, key, cfg, transpose=True,
+                                  backward=True)
+    else:
+        def mvm(dd, kk):
+            return analog_mvm(state.w, dd, kk, cfg, transpose=True)
 
-    z = management.with_management(mvm, delta, key, cfg, backward=True)
+        z, sat = management.with_management(mvm, delta, key, cfg,
+                                            backward=True)
     if d > 1:
         z = z / d
-    return z
+    return (z, sat) if return_sat else z
 
 
 def tile_update(state: TileState, x: Array, delta: Array, key: jax.Array,

@@ -1,12 +1,18 @@
 """Pallas TPU kernels for the analog hot spots.
 
-noisy_mvm.py     - fused array read: matmul + on-chip Gaussian + bound clip,
-                   with physical array-split segment semantics.
+noisy_mvm.py     - fused raw array read: matmul + on-chip Gaussian + bound
+                   clip, with physical array-split segment semantics (one
+                   launch per physical read — the iterative-BM retry unit).
+managed_mvm.py   - fused *managed* read: NM scale + two-phase BM (both reads
+                   share one launch; the 1/16 retry reuses the MXU product) +
+                   select-on-saturation + clip + #_d replica average, all in
+                   one VMEM-resident pass.
 pulse_update.py  - fused update cycle: pulse-coincidence matmuls + device
                    maps + cycle noise + conductance clip.
 flash_attention.py - fused attention forward (online softmax in VMEM) for
                    the serving path; realises the roofline's
                    'fused-attention projection' (EXPERIMENTS.md §Roofline).
-ops.py           - jit'd wrappers matching the tile API (auto-interpret on CPU).
+ops.py           - jit'd wrappers matching the tile API (auto-interpret on
+                   non-TPU backends, evaluated per call).
 ref.py           - pure-jnp oracles (shared with the simulator's default path).
 """

@@ -1,0 +1,18 @@
+"""Version shims for the Pallas TPU API surface.
+
+The TPU compiler-params dataclass was renamed ``TPUCompilerParams`` →
+``CompilerParams`` across jax releases; resolve whichever this jax provides
+so the kernels import cleanly on both sides of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def compiler_params(**kwargs):
+    """Build the TPU compiler-params object for ``pl.pallas_call``."""
+    return _PARAMS_CLS(**kwargs)

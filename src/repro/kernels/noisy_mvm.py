@@ -36,6 +36,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 _GOLDEN = np.uint32(0x9E3779B9)
 _M1 = np.uint32(0x21F0AAAD)
 _M2 = np.uint32(0x735A2D97)
@@ -201,7 +203,7 @@ def noisy_mvm_pallas(w: jax.Array, x2d: jax.Array, seed: jax.Array, *,
             pltpu.VMEM((bm, bn), jnp.float32),   # output accumulator
             pltpu.VMEM((bm, 1), jnp.int32),      # saturation accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(seed.reshape(1, 1).astype(jnp.uint32), xpad, wpad)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.device import DeviceMaps, RPUConfig
+from repro.kernels.managed_mvm import managed_mvm_pallas
 from repro.kernels.noisy_mvm import noisy_mvm_pallas
 from repro.kernels.pulse_update import pulse_update_pallas
 from repro.utils import fastrng
@@ -23,8 +24,12 @@ from repro.utils import fastrng
 Array = jax.Array
 
 
-@functools.lru_cache(maxsize=1)
 def _interpret_default() -> bool:
+    # Evaluated per call, NOT cached at first use: the active platform can
+    # change after import (tests forcing jax_platform_name, multi-backend
+    # processes), and a stale cached answer silently runs compiled kernels
+    # on CPU or interpret mode on TPU.  jax caches the backend lookup itself,
+    # so this is cheap.
     return jax.default_backend() != "tpu"
 
 
@@ -49,6 +54,57 @@ def noisy_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
     out_dim = c if transpose else r
     return (y2d.reshape(*batch_shape, out_dim),
             sat.reshape(batch_shape))
+
+
+def managed_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
+                transpose: bool = False, backward: bool = False
+                ) -> Tuple[Array, Array]:
+    """Kernel-backed *managed* analog read: NM scale, fixed-latency BM
+    (off / two-phase), clipping and the #_d replica average in ONE Pallas
+    launch (``managed_mvm_pallas``).
+
+    Key discipline mirrors ``core.tile.managed_mvm_reference`` exactly: the
+    two-phase reads consume ``jax.random.split(key)``, a single read consumes
+    ``key`` itself — so the fused kernel draws bit-identical noise to the
+    reference pipeline.  Iterative BM is data-dependent multi-launch by
+    nature and must go through ``management.with_bound_management`` over
+    ``noisy_mvm`` instead.
+    """
+    from repro.core import management
+
+    r, c = w.shape
+    contraction = r if transpose else c
+    limit = cfg.max_array_rows if transpose else cfg.max_array_cols
+    n_seg = max(1, -(-contraction // limit))
+    d_avg = 1 if transpose else cfg.devices_per_weight
+
+    use_bm = cfg.bound_management and cfg.out_bound != float("inf")
+    if use_bm and cfg.bm_mode != "two_phase":
+        raise ValueError(
+            "iterative BM cannot be fused into one launch; use "
+            "management.with_bound_management over noisy_mvm")
+    use_nm = cfg.noise_management and (backward or cfg.nm_forward)
+
+    batch_shape = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    nm_s = (management.nm_scale(x2d) if use_nm
+            else jnp.ones((x2d.shape[0], 1), x2d.dtype))
+    sigma = cfg.read_noise if (cfg.noise_backward if transpose
+                               else cfg.noise_forward) else 0.0
+    if use_bm:
+        k1, k2 = jax.random.split(key)
+        seeds = jnp.stack([fastrng.key_to_seed(k1), fastrng.key_to_seed(k2)])
+    else:
+        s1 = fastrng.key_to_seed(key)
+        seeds = jnp.stack([s1, s1])
+
+    y2d, sat = managed_mvm_pallas(
+        w, x2d, nm_s, seeds, sigma=float(sigma), alpha=float(cfg.out_bound),
+        n_seg=n_seg, transpose=transpose, two_phase=use_bm,
+        retry_scale=float(management.TWO_PHASE_SCALE), d_avg=d_avg,
+        interpret=_interpret_default())
+    out_f = c if transpose else r // d_avg
+    return (y2d.reshape(*batch_shape, out_f), sat.reshape(batch_shape))
 
 
 def pulse_update_fused(w: Array, maps: DeviceMaps, streams_rows: Array,

@@ -29,6 +29,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 from repro.kernels.noisy_mvm import _mix, _normal_at
 
 
@@ -122,7 +124,7 @@ def pulse_update_pallas(w: jax.Array, dw_up: jax.Array, dw_dn: jax.Array,
             pltpu.VMEM((bm, bn), jnp.float32),
             pltpu.VMEM((bm, bn), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(seed.reshape(1, 1).astype(jnp.uint32), rp, cp, wp, upp, dnp, bp)

@@ -28,6 +28,17 @@ def noisy_mvm_ref(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
     return _tile.analog_mvm_reference(w, x, key, cfg, transpose=transpose)
 
 
+def managed_mvm_ref(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
+                    transpose: bool = False, backward: bool = False
+                    ) -> Tuple[Array, Array]:
+    """Oracle for ``managed_mvm_pallas``: the reworked pure-jnp managed
+    pipeline (NM scale computed once, BM over raw reads, same key
+    discipline) on *physical* output channels — apply the #_d replica mean
+    digitally to match the fused kernel's averaged output."""
+    return _tile.managed_mvm_reference(w, x, key, cfg, transpose=transpose,
+                                       backward=backward)
+
+
 def pulse_update_ref(w: Array, dw_up: Array, dw_dn: Array, bound: Array,
                      streams_rows: Array, streams_cols: Array,
                      key: Array, ctoc: float) -> Array:

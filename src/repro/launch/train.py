@@ -61,12 +61,15 @@ def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
           analog: bool = False, ckpt_dir: Optional[str] = None,
           ckpt_every: int = 50, multi_pod: bool = False,
           lr: float = 3e-4, log_every: int = 1, seed: int = 0,
-          engine: str = "scan", scan_chunk: int = 10):
+          engine: str = "scan", scan_chunk: int = 10,
+          bm_mode: str = "iterative", use_pallas: bool = False):
     import dataclasses
     cfg = registry.get_config(arch, smoke=smoke)
     if analog:
         from repro.core.device import rpu_nm_bm_um_bl1
-        cfg = dataclasses.replace(cfg, analog=rpu_nm_bm_um_bl1(),
+        rpu = dataclasses.replace(rpu_nm_bm_um_bl1(), bm_mode=bm_mode,
+                                  use_pallas=use_pallas)
+        cfg = dataclasses.replace(cfg, analog=rpu,
                                   param_dtype=jnp.float32)
 
     mesh, rules = build_mesh_and_rules(smoke, multi_pod)
@@ -181,12 +184,22 @@ def main():
                          "per-step loop (correctness oracle)")
     ap.add_argument("--scan-chunk", type=int, default=10,
                     help="steps fused per dispatch with --engine scan")
+    ap.add_argument("--bm-mode", choices=("iterative", "two_phase"),
+                    default="iterative",
+                    help="bound-management mode for --analog: the paper's "
+                         "halve-and-retry loop, or the fixed-latency "
+                         "two-phase retry (fusable into one managed-read "
+                         "launch with --use-pallas)")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route analog reads/updates through the Pallas "
+                         "kernels (fused managed read for two_phase/off BM)")
     args = ap.parse_args()
     res = train(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
                 smoke=args.smoke, analog=args.analog,
                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                 multi_pod=args.multi_pod, lr=args.lr, engine=args.engine,
-                scan_chunk=args.scan_chunk)
+                scan_chunk=args.scan_chunk, bm_mode=args.bm_mode,
+                use_pallas=args.use_pallas)
     print(f"[train] done; final loss {res['final_loss']:.4f}")
 
 

@@ -114,6 +114,113 @@ def test_bm_per_vector_scaling(seed):
     np.testing.assert_allclose(np.asarray(y[1]), 1.0, rtol=1e-5)
 
 
+# --- NM ∘ BM composition (the scale-cancellation regression) -----------------
+
+def _recording_mvm(w, cfg, record):
+    """Raw analog read that reports the max-abs input the ARRAY actually
+    sees (via debug callback — fires per physical read, including while_loop
+    retries)."""
+    def f(x, key):
+        jax.debug.callback(
+            lambda m: record.append(float(m)), jnp.max(jnp.abs(x)))
+        return analog_mvm_reference(w, x, key, cfg)
+    return f
+
+
+def test_bm_halving_reaches_array_under_nm():
+    """Regression for the NM∘BM scale-cancellation bug: with NM and BM both
+    on, every BM retry must HALVE the input the physical array sees.  The
+    pre-fix `with_management` re-derived the NM scale from the already
+    BM-rescaled input (`nm_scale(x/scale) = nm_scale(x)/scale`), so the
+    array saw the same full-scale vector on every retry and this list was
+    constant at 1.0."""
+    cfg = RPUConfig(read_noise=0.0, out_bound=12.0, noise_management=True,
+                    bound_management=True, bm_max_iters=8)
+    w = jnp.eye(8) * 100.0
+    x = jnp.full((2, 8), 1e-3)        # NM scale 1e-3; normalized read = 100
+    record = []
+    y, sat = management.with_management(
+        _recording_mvm(w, cfg, record), x, jax.random.key(0), cfg,
+        backward=True)
+    jax.effects_barrier()
+    seen = sorted(record, reverse=True)
+    assert len(seen) >= 3, seen
+    # first read is the NM-normalized full-scale vector…
+    np.testing.assert_allclose(seen[0], 1.0, rtol=1e-6)
+    # …and every retry reaches the array at exactly half the previous scale.
+    for prev, cur in zip(seen, seen[1:]):
+        np.testing.assert_allclose(cur, prev / 2.0, rtol=1e-6)
+    # 100 / 2^n < 12 first at n=4 -> reads at 1, 1/2, 1/4, 1/8, 1/16
+    np.testing.assert_allclose(seen[-1], 1.0 / 16.0, rtol=1e-6)
+    assert not bool(jnp.any(sat))
+
+
+def test_bm_recovers_beyond_out_bound_under_nm():
+    """A saturating vector's managed output must exceed out_bound after
+    rescaling (effective bound 2^n * alpha) — under NM, the pre-fix path
+    stayed clipped at alpha * s_nm forever."""
+    cfg = RPUConfig(read_noise=0.0, out_bound=12.0, noise_management=True,
+                    bound_management=True, bm_max_iters=10)
+    w = jnp.eye(8) * 50.0
+    x = jnp.full((3, 8), 0.5)         # NM scale 0.5, true output 25 > alpha
+    y, sat = management.with_management(
+        lambda xx, kk: analog_mvm_reference(w, xx, kk, cfg), x,
+        jax.random.key(1), cfg, backward=True)
+    assert float(jnp.max(y)) > cfg.out_bound
+    np.testing.assert_allclose(np.asarray(y), 25.0, rtol=1e-5)
+    assert not bool(jnp.any(sat))
+
+
+def test_two_phase_bm_halving_reaches_array_under_nm():
+    """Same composition fix for the two-phase mode: the second read must hit
+    the array at 1/16 of the NM-normalized scale (pre-fix it re-normalized
+    to full scale and the retry was a no-op)."""
+    cfg = RPUConfig(read_noise=0.0, out_bound=12.0, noise_management=True,
+                    bound_management=True, bm_mode="two_phase")
+    w = jnp.eye(4) * 100.0
+    x = jnp.full((2, 4), 1e-3)
+    record = []
+    y, _ = management.with_management(
+        _recording_mvm(w, cfg, record), x, jax.random.key(0), cfg,
+        backward=True)
+    jax.effects_barrier()
+    seen = sorted(record, reverse=True)
+    assert len(seen) == 2, seen
+    np.testing.assert_allclose(seen[0], 1.0, rtol=1e-6)
+    np.testing.assert_allclose(seen[1], 1.0 / 16.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(y), 0.1, rtol=1e-5)
+
+
+def test_two_phase_residual_saturation_flag():
+    """Vectors whose 1/16 read ALSO clips must surface residual_sat=True —
+    their selected output is a rescaled clipped value, not a recovery."""
+    cfg = RPUConfig(read_noise=0.0, out_bound=12.0)
+    mvm = lambda xx, kk: analog_mvm_reference(jnp.eye(4), xx, kk, cfg)
+    # rows: recovered by the 1/16 read (100 < 16*12) | unrecoverable (1000)
+    x = jnp.stack([jnp.full((4,), 100.0), jnp.full((4,), 1000.0)])
+    y, residual = management.with_bound_management_two_phase(
+        mvm, x, jax.random.key(0))
+    assert not bool(residual[0])
+    assert bool(residual[1])
+    np.testing.assert_allclose(np.asarray(y[0]), 100.0, rtol=1e-5)
+    # the unrecovered row is clipped at the effective bound 16 * alpha
+    np.testing.assert_allclose(np.asarray(y[1]), 16.0 * 12.0, rtol=1e-5)
+
+
+def test_managed_residual_flag_propagates_to_tile():
+    """tile_forward(return_sat=True) must expose unrecovered vectors."""
+    from repro.core import tile as tl
+    cfg = RPUConfig(read_noise=0.0, out_bound=12.0, noise_management=True,
+                    nm_forward=True, bound_management=True,
+                    bm_mode="two_phase")
+    state = tl.TileState(w=jnp.eye(4) * 1e5, maps=None, seed=jax.random.key(0))
+    x = jnp.concatenate([jnp.full((1, 4), 1.0), jnp.zeros((1, 4))])
+    y, sat = tl.tile_forward(state, x, jax.random.key(1), cfg,
+                             return_sat=True)
+    assert bool(sat[0])          # 1e5 >> 16 * alpha: not recoverable
+    assert not bool(sat[1])      # zero-signal row never clips
+
+
 # --- Update management --------------------------------------------------------
 
 def test_um_factors_preserve_learning_rate():
