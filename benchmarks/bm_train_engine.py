@@ -107,6 +107,64 @@ def bench_scan(cfg, xtr, ytr, batch, epochs):
 
 
 # ---------------------------------------------------------------------------
+# Sharded-read microbenchmark: managed MVMs/s vs tile-grid shape
+# ---------------------------------------------------------------------------
+
+def bench_sharded_read(grids=((1, 1), (1, 2), (2, 2), (2, 4)),
+                       batch=256, rows=256, cols=1026, iters=20):
+    """Managed MVMs/s of the tile-grid read per grid shape.
+
+    Run with a forced multi-device host to exercise the shard_map path::
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+            PYTHONPATH=src python benchmarks/bm_train_engine.py --grid-only
+
+    Grids that do not fit the device count run the serial single-device
+    oracle (flagged in the output) — identical numerics, no parallelism.
+    The (1, 1) entry is the plain unsharded tile path (the baseline).
+    NM + two-phase BM (fixed two-read latency) so every shape runs the
+    same number of shard rounds.
+    """
+    import dataclasses
+    import jax
+    from repro.core import tile as tl, tile_grid as tg
+    from repro.core.device import RPUConfig
+
+    base = RPUConfig(noise_management=True, nm_forward=True,
+                     bound_management=True, bm_mode="two_phase")
+    w = jax.random.normal(jax.random.key(1), (rows, cols)) * 0.5
+    x = jax.random.normal(jax.random.key(2), (batch, cols)) * 2.0
+    key = jax.random.key(3)
+    out = {"workload": {"tile": [rows, cols], "batch": batch,
+                        "devices": jax.device_count(),
+                        "managed": "NM + two-phase BM"},
+           "grids": {}}
+    for grid in grids:
+        cfg = dataclasses.replace(base, tile_grid=grid)
+        state = tl.TileState(w=w, maps=None, seed=key)
+        sharded = tg.grid_is_sharded(cfg)
+
+        @jax.jit
+        def read(xx, kk, cfg=cfg, state=state):
+            return tl.tile_forward(state, xx, kk, cfg)
+
+        y = read(x, key)
+        jax.block_until_ready(y)
+        t0 = time.time()
+        for _ in range(iters):
+            y = read(x, key)
+        jax.block_until_ready(y)
+        rate = iters / (time.time() - t0)
+        label = "sharded" if sharded else (
+            "plain" if grid == (1, 1) else "serial-fallback")
+        out["grids"]["x".join(map(str, grid))] = {
+            "mvms_per_sec": rate * batch, "path": label}
+        print(f"[sharded-read] grid {grid[0]}x{grid[1]:<2d} ({label:15s}) "
+              f"{rate * batch:9.0f} managed MVMs/s", flush=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Managed-read microbenchmark: physical-read launch counts + steps/sec
 # ---------------------------------------------------------------------------
 
@@ -265,7 +323,24 @@ def main():
     ap.add_argument("--modes", type=str, default="digital,analog")
     ap.add_argument("--skip-engines", action="store_true",
                     help="only run the managed-read microbenchmark")
+    ap.add_argument("--grid-only", action="store_true",
+                    help="only run the sharded tile-grid read benchmark "
+                         "(set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8 to exercise the shard_map path)")
     args = ap.parse_args()
+
+    if args.grid_only:
+        out = {"sharded_read": bench_sharded_read()}
+        if os.path.exists(RESULTS):
+            with open(RESULTS) as f:
+                prior = json.load(f)
+            prior["sharded_read"] = out["sharded_read"]
+            out = prior
+        os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+        with open(RESULTS, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"[bench] wrote {RESULTS}")
+        return
 
     from repro.core import device as dev
     from repro.data import mnist

@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Docs link check: fail on dead *relative* links in README and docs/.
+
+Scans markdown files for inline links/images ``[text](target)`` and
+verifies that every relative target (optionally with a ``#fragment``)
+exists on disk.  External (``http(s)://``, ``mailto:``) and pure-anchor
+links are skipped.  Exit code 1 lists every dead link — wired into CI so
+renames/moves cannot silently strand the documentation.
+
+Run:  python scripts/check_links.py [files/dirs ...]   (default: README.md docs)
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline markdown links, excluding images' alt brackets handled the same way
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(paths):
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                for n in sorted(names):
+                    if n.endswith(".md"):
+                        yield os.path.join(root, n)
+        elif p.endswith(".md"):
+            yield p
+
+
+def dead_links(md_path: str):
+    base = os.path.dirname(os.path.abspath(md_path))
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    # drop fenced code blocks: command examples are not links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_SKIP):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(base, path))):
+            yield target
+
+
+def main(argv):
+    roots = argv[1:] or ["README.md", "docs"]
+    bad = []
+    n_files = 0
+    for md in md_files(roots):
+        n_files += 1
+        bad.extend((md, t) for t in dead_links(md))
+    if bad:
+        for md, target in bad:
+            print(f"DEAD LINK {md}: ({target})")
+        print(f"[check_links] {len(bad)} dead relative link(s) "
+              f"in {n_files} file(s)")
+        return 1
+    print(f"[check_links] OK — {n_files} markdown file(s), "
+          "no dead relative links")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -15,6 +15,13 @@ implements the paper's *physical* cycles:
 Biases are trained on the array as an extra always-on input column (the
 paper's 16x26 = 16x(5*5*1+1) K1 layout).
 
+With ``cfg.tile_grid = (R, C)`` all three cycles route through the
+mesh-sharded sub-tile grid (``core/tile_grid.py``): the custom_vjp below
+is unchanged — the forward/backward reads and the pulse update it calls
+dispatch per config, so the same layer runs single-device or
+tile-parallel on the ``'array_row' x 'array_col'`` crossbar mesh
+(docs/scaling.md).
+
 ``mode='digital'`` short-circuits everything to an exact FP dense layer over
 the *effective* (replica-averaged) weights — the FP-baseline path.
 """

@@ -69,6 +69,13 @@ class RPUConfig:
     # --- physical array-size limit (Discussion: max 4096x4096) --------------
     max_array_rows: int = 4096
     max_array_cols: int = 4096
+    # --- sharded tile grid (core/tile_grid.py) -------------------------------
+    # (row_blocks, col_blocks): decompose the physical array into a grid of
+    # sub-tiles placed on a 2-D 'array_row' x 'array_col' device mesh
+    # (distributed.sharding.crossbar_mesh).  None or (1, 1) keeps the
+    # single-tile path; with fewer devices than blocks the grid runs as the
+    # serial single-device oracle (identical numerics, no shard_map).
+    tile_grid: Optional[Tuple[int, int]] = None
     # --- implementation switches ---------------------------------------------
     seeded_maps: bool = False          # regenerate device maps from RNG (see module doc)
     dtype: jnp.dtype = jnp.float32     # simulation dtype for weights / MVMs
@@ -99,6 +106,14 @@ class RPUConfig:
         if bl is not None:
             kw["bl"] = bl
         return dataclasses.replace(self, **kw)
+
+    def with_tile_grid(self, rows: int, cols: int) -> "RPUConfig":
+        """Decompose the tile into a (rows x cols) sub-tile grid (see
+        ``core/tile_grid.py``; sharded over ``crossbar_mesh`` when enough
+        devices exist)."""
+        if rows < 1 or cols < 1:
+            raise ValueError(f"tile_grid must be >= (1, 1), got {(rows, cols)}")
+        return dataclasses.replace(self, tile_grid=(rows, cols))
 
     @property
     def amplification(self) -> None:

@@ -30,6 +30,14 @@ for a batch of input vectors ``x`` of shape ``(..., n_in)`` producing
 ``(..., n_out)`` plus a boolean saturation flag per output vector (any output
 channel clipped at +-alpha).  Fresh read noise must be drawn from ``key`` on
 every call — a BM retry is a *new* physical read.
+
+When the callable is a mesh-sharded tile-grid read (``core/tile_grid.py``)
+the flag it returns is already the *global* OR over every sub-tile's
+partial reads, so each BM decision below is identical on all devices:
+the iterative loop's trip count is mesh-uniform (each retry re-reads all
+shards in lockstep) and the two-phase select picks the same phase
+everywhere — bound management keeps its exact single-device semantics
+with zero extra logic here.
 """
 
 from __future__ import annotations

@@ -10,10 +10,18 @@ in_f)`` mapped onto cross-point devices:
   *split*: output-dim splits are mathematically transparent (each output row
   has its own integrator), but **contraction-dim splits matter** — each
   partial read is a separate physical integration with its own additive noise
-  and its own signal bound, and the partial results are summed digitally.
+  and its own signal bound, clipped *before* the digital summation of the
+  partials.  ``analog_mvm`` evaluates all partials of one tile in a single
+  batched einsum on one device; with ``cfg.tile_grid = (R, C)`` the same
+  decomposition instead runs tile-parallel on a 2-D device mesh
+  (``core/tile_grid.py`` — one sub-tile per device, partials psum'd along
+  the contraction axis, saturation OR-reduced globally).
 
 Every analog read draws fresh Gaussian noise (sigma) and clips elementwise at
-the integrator bound (+-alpha); the saturation flag feeds bound management.
+the integrator bound (+-alpha).  All managed reads return ``(y,
+residual_sat)`` — the per-vector flag marks outputs still clipped after
+noise/bound management (it is the raw saturation flag when BM is off) —
+and ``tile_forward`` / ``tile_backward`` expose it via ``return_sat=True``.
 
 All functions are pure and jit/shard-compatible; ``cfg.use_pallas`` routes the
 inner MVM through the Pallas TPU kernel (``repro.kernels``), otherwise the
@@ -223,6 +231,33 @@ def _replica_mean(y_phys: Array, d: int) -> Array:
     return jnp.mean(y_phys.reshape(*y_phys.shape[:-1], d, out_f), axis=-2)
 
 
+def replicate_delta(delta: Array, d: int,
+                    rows_phys: Optional[int] = None) -> Array:
+    """Replicate a logical error vector to the ``#_d``-replicated physical
+    row layout: ``(..., out_f) -> (..., #_d * out_f)``.
+
+    THE single place that produces and asserts the replicated-delta layout
+    — the backward transpose read and the pulse update both route through
+    it, so the layout contract lives here and nowhere else.  ``rows_phys``
+    (when known) pins the result against the physical row count.
+    """
+    assert delta.ndim >= 1, "delta must carry a trailing output-channel axis"
+    if d > 1:
+        delta = jnp.tile(delta, (1,) * (delta.ndim - 1) + (d,))
+    assert rows_phys is None or delta.shape[-1] == rows_phys, (
+        "replicated delta must match the physical row layout",
+        delta.shape, d, rows_phys)
+    return delta
+
+
+def _grid_routed(cfg: RPUConfig) -> bool:
+    """True when tile cycles route through the sub-tile grid subsystem
+    (``core/tile_grid.py``).  The trivial (1, 1) grid stays on the plain
+    single-tile path, which is bit-identical and keeps the fused
+    ``managed_mvm`` Pallas launch."""
+    return cfg.tile_grid is not None and tuple(cfg.tile_grid) != (1, 1)
+
+
 def tile_forward(state: TileState, x: Array, key: jax.Array,
                  cfg: RPUConfig, *, return_sat: bool = False):
     """Forward cycle ``y = W_eff x`` with NM/BM management + replica average.
@@ -236,6 +271,11 @@ def tile_forward(state: TileState, x: Array, key: jax.Array,
     flag (True where management could not recover an unclipped read).
     """
     d = cfg.devices_per_weight
+
+    if _grid_routed(cfg):
+        from repro.core import tile_grid  # local import, avoids cycle
+        return tile_grid.grid_tile_forward(state, x, key, cfg,
+                                           return_sat=return_sat)
 
     if cfg.use_pallas and not _bm_is_iterative(cfg):
         from repro.kernels import ops as kops
@@ -260,8 +300,12 @@ def tile_backward(state: TileState, delta: Array, key: jax.Array,
     the digital domain divides by #_d.  Routing mirrors ``tile_forward``.
     """
     d = cfg.devices_per_weight
-    if d > 1:
-        delta = jnp.concatenate([delta] * d, axis=-1)  # (..., #_d * out_f)
+    delta = replicate_delta(delta, d, rows_phys=state.w.shape[0])
+
+    if _grid_routed(cfg):
+        from repro.core import tile_grid  # local import, avoids cycle
+        return tile_grid.grid_tile_backward(state, delta, key, cfg,
+                                            return_sat=return_sat)
 
     if cfg.use_pallas and not _bm_is_iterative(cfg):
         from repro.kernels import ops as kops

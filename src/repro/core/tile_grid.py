@@ -1,0 +1,452 @@
+"""Mesh-sharded crossbar tile grids: the paper's array splits on real devices.
+
+The paper's Discussion caps one physical RPU array at 4096x4096 and realises
+larger logical matrices as a *grid* of physical arrays whose partial reads
+are summed digitally.  ``core/tile.py`` models that split serially on one
+device; this module maps it onto hardware: the physical weight is decomposed
+into a ``(row_blocks x col_blocks)`` grid of sub-tiles placed on a 2-D
+``'array_row' x 'array_col'`` device mesh (``distributed.sharding.
+crossbar_mesh``), and every tile cycle runs as a ``shard_map`` in which each
+device operates only on its local sub-tile:
+
+* **read** (forward / transpose): each device performs one raw analog read
+  of its block (through the Pallas ``noisy_mvm`` kernel under
+  ``cfg.use_pallas``), partial results are **psum'd along the contraction
+  axis** with the integrator clip applied *before* the digital summation —
+  exactly the paper's split semantics — and the per-vector saturation flag
+  is **OR-reduced over the whole mesh** so noise/bound management keeps its
+  single-device meaning:
+
+  - NM's per-vector scale is the *global* ``max|x|`` — over chunked inputs
+    that is a psum-max over the 'array_col' chunks; here the scale is
+    computed once from the (replicated) unchunked input, which is
+    numerically identical.
+  - BM sees the globally-reduced flag, so every retry round re-reads *all*
+    shards with the same doubled scale: two-phase BM is two synchronized
+    shard rounds, iterative BM a while_loop whose trip count is identical
+    on every device (the cond consumes the already-global flag).
+
+* **update**: communication-free.  Each shard consumes its slice of the
+  row/col pulse streams; the coincidence-count contraction (over samples x
+  pulse slots) is block-local, so the sharded update is bit-identical to
+  the serial grid oracle with zero collectives.
+
+Key discipline: block ``(i, j)`` of a read draws noise from
+``fold_in(read_key, i * grid_cols + j)`` (the read key itself follows the
+single-device NM/BM split discipline of ``core/management.py``).  The
+serial reference implementations below use the *same* fold_in schedule, so
+``tests/test_tile_grid.py`` pins the sharded paths numerically identical to
+the single-device grid oracle on a forced multi-device host.
+
+Padding: non-divisible shapes pad the physical array with zero weights /
+zero input lines up to the block multiple.  Padded output rows are real
+integrator channels on a physical chip (they integrate pure read noise and
+are discarded digitally); their noise draws are therefore kept — both paths
+draw them identically — and their outputs are sliced away after assembly.
+
+When fewer than ``row_blocks * col_blocks`` devices are present the grid
+runs serially with unchanged numerics, so grid configs are portable from a
+laptop to a pod.  The plain single-tile path in ``core/tile.py`` (including
+the fused ``managed_mvm`` Pallas launch) remains the single-device fast
+path and the bit-parity oracle for ``tile_grid=(1, 1)`` or ``None``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import management
+from repro.core import tile as tile_lib
+from repro.core import update as update_lib
+from repro.core.device import DeviceMaps, RPUConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Grid geometry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TileGrid:
+    """Static geometry of one logical tile's sub-tile grid.
+
+    ``grid_rows`` blocks partition the *physical* row dim (``#_d * out_f``,
+    the output dim of the forward read), ``grid_cols`` blocks the
+    contraction (column) dim.  Block sizes are ceil-divided; the padded
+    physical array is ``(rows_pad, cols_pad)``.
+    """
+
+    grid_rows: int
+    grid_cols: int
+    rows_phys: int
+    cols: int
+
+    @classmethod
+    def for_tile(cls, w_shape: Tuple[int, int], cfg: RPUConfig) -> "TileGrid":
+        gr, gc = cfg.tile_grid if cfg.tile_grid is not None else (1, 1)
+        r, c = w_shape
+        if not (1 <= gr <= r and 1 <= gc <= c):
+            raise ValueError(
+                f"tile_grid {(gr, gc)} invalid for physical array {(r, c)}")
+        return cls(gr, gc, r, c)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.grid_rows * self.grid_cols
+
+    @property
+    def block_rows(self) -> int:
+        return -(-self.rows_phys // self.grid_rows)
+
+    @property
+    def block_cols(self) -> int:
+        return -(-self.cols // self.grid_cols)
+
+    @property
+    def rows_pad(self) -> int:
+        return self.grid_rows * self.block_rows
+
+    @property
+    def cols_pad(self) -> int:
+        return self.grid_cols * self.block_cols
+
+    def sharded(self) -> bool:
+        """True when enough local devices exist to place the mesh (and the
+        grid is non-trivial)."""
+        return self.n_blocks > 1 and jax.device_count() >= self.n_blocks
+
+    def mesh(self):
+        return _cached_mesh(self.grid_rows, self.grid_cols,
+                            jax.device_count())
+
+    def pad_w(self, w: Array) -> Array:
+        return jnp.pad(w, ((0, self.rows_pad - self.rows_phys),
+                           (0, self.cols_pad - self.cols)))
+
+    def pad_last(self, x: Array, to: int) -> Array:
+        pad = to - x.shape[-1]
+        if pad == 0:
+            return x
+        return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_mesh(gr: int, gc: int, n_devices: int):
+    from repro.distributed import sharding as shd
+    return shd.crossbar_mesh(gr, gc)
+
+
+def grid_is_sharded(cfg: RPUConfig) -> bool:
+    """True when ``cfg`` routes tile cycles through a *sharded* grid (i.e.
+    a crossbar mesh will claim devices).  Used by the training engines to
+    reject conflicting data-parallel meshes."""
+    if cfg.tile_grid is None:
+        return False
+    gr, gc = cfg.tile_grid
+    return gr * gc > 1 and jax.device_count() >= gr * gc
+
+
+def _block_key(key: Array, flat_index, n_blocks: int) -> Array:
+    """Per-block read key: ``fold_in(key, i * grid_cols + j)``.
+
+    The (1, 1) grid keeps the caller's key untouched so a trivial grid is
+    bit-identical to the plain single-tile path.
+    """
+    if n_blocks == 1:
+        return key
+    return jax.random.fold_in(key, flat_index)
+
+
+def _replicated(mesh, *arrays):
+    """Pin arrays at a shard_map boundary to an explicit replicated layout.
+
+    Works around a jax 0.4.37 GSPMD miscompilation: a shard_map operand
+    produced under jit by mixing a traced array with broadcasts/slices of
+    mesh-sharded values (the analog bias column concat, ``jnp.tile``
+    replica broadcasts, im2col slice-concats over a previous read's
+    output) reaches the body with elements scaled by the size of mesh
+    axes unmentioned in its in_spec — silently, with ``check_rep`` either
+    way.  Pinning BOTH the operands entering a shard_map and its outputs
+    to the replicated NamedSharding forces clean layouts on each side of
+    the boundary and restores the eager semantics end-to-end (a chained
+    program otherwise re-triggers the bug at the *next* tile's boundary,
+    through the digital glue ops on the sharded output).  The constraint
+    is a no-op for already-replicated values.  (Pinned by the jit parity
+    cases in tests/test_tile_grid.py and the stage-chain case there.)
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    s = NamedSharding(mesh, P())
+    return tuple(jax.lax.with_sharding_constraint(a, s) for a in arrays)
+
+
+# ---------------------------------------------------------------------------
+# Raw grid read (one physical read per sub-tile, clip before digital sum)
+# ---------------------------------------------------------------------------
+
+def grid_analog_mvm_reference(w: Array, x: Array, key: Array, cfg: RPUConfig,
+                              grid: Optional[TileGrid] = None, *,
+                              transpose: bool = False) -> Tuple[Array, Array]:
+    """Serial single-device oracle of the sharded grid read.
+
+    Iterates the sub-tile grid in row-major block order; block ``(i, j)``
+    performs one raw analog read (``tile.analog_mvm`` — noise, clip, and
+    any residual intra-block physical split) with its fold_in key.  Partial
+    outputs accumulate over the contraction blocks in index order (the same
+    left-fold order the mesh psum applies) and the saturation flag is the
+    OR over every block.
+    """
+    g = grid if grid is not None else TileGrid.for_tile(w.shape, cfg)
+    wp = g.pad_w(w)
+    br, bc = g.block_rows, g.block_cols
+    if transpose:
+        x = g.pad_last(x, g.rows_pad)
+        out_dim, n_out, n_in = g.cols, g.grid_cols, g.grid_rows
+    else:
+        x = g.pad_last(x, g.cols_pad)
+        out_dim, n_out, n_in = g.rows_phys, g.grid_rows, g.grid_cols
+
+    out_chunks = []
+    sat = None
+    for o in range(n_out):
+        y_o = None
+        for k in range(n_in):
+            i, j = (k, o) if transpose else (o, k)
+            wb = wp[i * br:(i + 1) * br, j * bc:(j + 1) * bc]
+            xin = x[..., k * (br if transpose else bc):
+                    (k + 1) * (br if transpose else bc)]
+            bk = _block_key(key, i * g.grid_cols + j, g.n_blocks)
+            yb, satb = tile_lib.analog_mvm(wb, xin, bk, cfg,
+                                           transpose=transpose)
+            y_o = yb if y_o is None else y_o + yb
+            sat = satb if sat is None else jnp.logical_or(sat, satb)
+        out_chunks.append(y_o)
+    y = jnp.concatenate(out_chunks, axis=-1)[..., :out_dim]
+    return y, sat
+
+
+def grid_analog_mvm_sharded(w: Array, x: Array, key: Array, cfg: RPUConfig,
+                            grid: Optional[TileGrid] = None, *,
+                            transpose: bool = False) -> Tuple[Array, Array]:
+    """One shard round of the raw grid read on the crossbar mesh.
+
+    Device ``(i, j)`` reads its local sub-tile, the clipped partials are
+    psum'd along the contraction mesh axis, and the per-vector saturation
+    flag is OR-reduced (as a psum of counts) over *both* axes so every
+    device returns the identical global flag.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    g = grid if grid is not None else TileGrid.for_tile(w.shape, cfg)
+    wp = g.pad_w(w)
+    x = g.pad_last(x, g.rows_pad if transpose else g.cols_pad)
+    contract_ax = "array_row" if transpose else "array_col"
+    out_ax = "array_col" if transpose else "array_row"
+    out_dim = g.cols if transpose else g.rows_phys
+    gc = g.grid_cols
+    n_blocks = g.n_blocks
+    kd = jax.random.key_data(key)
+
+    def body(wl, xl, kdl):
+        k = jax.random.wrap_key_data(kdl)
+        i = jax.lax.axis_index("array_row")
+        j = jax.lax.axis_index("array_col")
+        bk = _block_key(k, i * gc + j, n_blocks)
+        yb, satb = tile_lib.analog_mvm(wl, xl, bk, cfg, transpose=transpose)
+        y = jax.lax.psum(yb, contract_ax)
+        sat = jax.lax.psum(satb.astype(jnp.int32),
+                           ("array_row", "array_col")) > 0
+        return y, sat
+
+    bdims = x.ndim - 1
+    in_specs = (P("array_row", "array_col"),
+                P(*([None] * bdims), contract_ax),
+                P())
+    out_specs = (P(*([None] * bdims), out_ax), P(*([None] * bdims)))
+    mesh = g.mesh()
+    f = shard_map(body, mesh=mesh, in_specs=in_specs,
+                  out_specs=out_specs, check_rep=False)
+    y, sat = _replicated(mesh, *f(*_replicated(mesh, wp, x, kd)))
+    return y[..., :out_dim], sat
+
+
+def grid_analog_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig,
+                    grid: Optional[TileGrid] = None, *,
+                    transpose: bool = False) -> Tuple[Array, Array]:
+    """Raw grid read: sharded when the mesh fits on the local devices,
+    otherwise the (numerically identical) serial oracle."""
+    g = grid if grid is not None else TileGrid.for_tile(w.shape, cfg)
+    fn = grid_analog_mvm_sharded if g.sharded() else grid_analog_mvm_reference
+    return fn(w, x, key, cfg, g, transpose=transpose)
+
+
+# ---------------------------------------------------------------------------
+# Managed grid read (NM / BM composition over shard rounds)
+# ---------------------------------------------------------------------------
+
+def grid_managed_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
+                     transpose: bool = False, backward: bool = False,
+                     force_reference: bool = False) -> Tuple[Array, Array]:
+    """Managed (NM + BM) read over the tile grid.
+
+    Reuses ``management.with_management`` verbatim with the grid read as
+    the raw physical MVM: the NM scale is computed exactly once from the
+    global (unchunked) input, and because the grid read returns the
+    *globally* OR-reduced saturation flag, every BM decision is identical
+    on all devices — two-phase BM lowers to two synchronized shard rounds,
+    iterative BM to a while_loop of rounds with a mesh-uniform trip count.
+
+    ``force_reference`` pins the serial oracle even when a mesh is
+    available (used by the parity tests).  Returns ``(y_phys,
+    residual_sat)`` on physical output channels, like
+    ``tile.managed_mvm_reference``.
+    """
+    g = TileGrid.for_tile(w.shape, cfg)
+    serial = force_reference or not g.sharded()
+    fn = grid_analog_mvm_reference if serial else grid_analog_mvm_sharded
+
+    def raw(xx, kk):
+        return fn(w, xx, kk, cfg, g, transpose=transpose)
+
+    return management.with_management(raw, x, key, cfg, backward=backward)
+
+
+def grid_tile_forward(state: tile_lib.TileState, x: Array, key: Array,
+                      cfg: RPUConfig, *, return_sat: bool = False):
+    """Forward cycle on the sharded grid (replica average in the digital
+    domain, after the gathered read) — grid counterpart of
+    ``tile.tile_forward``."""
+    y_phys, sat = grid_managed_mvm(state.w, x, key, cfg, transpose=False,
+                                   backward=False)
+    y = tile_lib._replica_mean(y_phys, cfg.devices_per_weight)
+    return (y, sat) if return_sat else y
+
+
+def grid_tile_backward(state: tile_lib.TileState, delta: Array, key: Array,
+                       cfg: RPUConfig, *, return_sat: bool = False):
+    """Backward (transpose) cycle on the grid; ``delta`` must already carry
+    the ``#_d``-replicated physical row layout (``tile.replicate_delta``)."""
+    z, sat = grid_managed_mvm(state.w, delta, key, cfg, transpose=True,
+                              backward=True)
+    d = cfg.devices_per_weight
+    if d > 1:
+        z = z / d
+    return (z, sat) if return_sat else z
+
+
+# ---------------------------------------------------------------------------
+# Communication-free sharded pulse update
+# ---------------------------------------------------------------------------
+
+def _ctoc_noise(key: Array, shape, cfg: RPUConfig) -> Array:
+    if cfg.fast_rng:
+        from repro.utils import fastrng
+        return fastrng.normal(key, shape, dtype=cfg.dtype)
+    return jax.random.normal(key, shape, dtype=cfg.dtype)
+
+
+def _pad_maps(maps: DeviceMaps, g: TileGrid) -> DeviceMaps:
+    """Pad device maps to the block grid: zero dw (padded devices never
+    move) and unit bound (clips the padded zeros to zero)."""
+    pr, pc = g.rows_pad - g.rows_phys, g.cols_pad - g.cols
+    if pr == 0 and pc == 0:
+        return maps
+    pad = ((0, pr), (0, pc))
+    return DeviceMaps(dw_up=jnp.pad(maps.dw_up, pad),
+                      dw_dn=jnp.pad(maps.dw_dn, pad),
+                      bound=jnp.pad(maps.bound, pad, constant_values=1.0))
+
+
+def _block_update(wl, upl, dnl, bndl, rows_l, cols_l, bk, cfg):
+    """One sub-tile's update: local coincidence contraction + maps + ctoc
+    noise + per-device bound clip.  Pure block-local math (no collectives)."""
+    up, dn = update_lib.coincidence_counts(rows_l, cols_l)
+    dw = up * upl - dn * dnl
+    if cfg.dw_min_ctoc > 0.0:
+        var = up * upl ** 2 + dn * dnl ** 2
+        dw = dw + cfg.dw_min_ctoc * jnp.sqrt(var) * _ctoc_noise(
+            bk, dw.shape, cfg)
+    return jnp.clip(wl + dw.astype(cfg.dtype), -bndl, bndl)
+
+
+def grid_pulse_update(w: Array, maps: DeviceMaps, x: Array, delta: Array,
+                      key: Array, cfg: RPUConfig, lr: float, *,
+                      force_reference: bool = False) -> Array:
+    """Grid update cycle: each shard consumes its slice of the row/col
+    pulse streams — zero inter-device communication.
+
+    The streams are sampled once for the full (padded) row/column drivers
+    with the global UM gains; block ``(i, j)`` then contracts row slice
+    ``i`` against column slice ``j`` — bit-identical to slicing the full
+    coincidence matmul, so the sharded and serial paths agree exactly
+    (cycle-to-cycle noise uses the per-block fold_in keys on both).
+    ``delta`` must already carry the physical (replicated) row layout.
+    """
+    g = TileGrid.for_tile(w.shape, cfg)
+    if x.ndim == 1:
+        x, delta = x[None], delta[None]
+    k_a, k_b, k_c = jax.random.split(key, 3)
+    cx, cd = update_lib.um_factors(x, delta, cfg, lr)
+    xp = g.pad_last(x, g.cols_pad)
+    dp = g.pad_last(delta, g.rows_pad)
+    cols_s = update_lib.sample_signed_streams(k_a, xp, cx, cfg.bl,
+                                              cfg.fast_rng)
+    rows_s = update_lib.sample_signed_streams(k_b, dp, cd, cfg.bl,
+                                              cfg.fast_rng)
+    wp, mp = g.pad_w(w), _pad_maps(maps, g)
+
+    if force_reference or not g.sharded():
+        new_w = _grid_update_reference(wp, mp, rows_s, cols_s, k_c, cfg, g)
+    else:
+        new_w = _grid_update_sharded(wp, mp, rows_s, cols_s, k_c, cfg, g)
+    return new_w[:g.rows_phys, :g.cols]
+
+
+def _grid_update_reference(wp, mp, rows_s, cols_s, k_c, cfg, g: TileGrid):
+    br, bc = g.block_rows, g.block_cols
+    rows_out = []
+    for i in range(g.grid_rows):
+        cols_out = []
+        for j in range(g.grid_cols):
+            blk = (slice(i * br, (i + 1) * br), slice(j * bc, (j + 1) * bc))
+            bk = _block_key(k_c, i * g.grid_cols + j, g.n_blocks)
+            cols_out.append(_block_update(
+                wp[blk], mp.dw_up[blk], mp.dw_dn[blk], mp.bound[blk],
+                rows_s[..., i * br:(i + 1) * br],
+                cols_s[..., j * bc:(j + 1) * bc], bk, cfg))
+        rows_out.append(jnp.concatenate(cols_out, axis=1))
+    return jnp.concatenate(rows_out, axis=0)
+
+
+def _grid_update_sharded(wp, mp, rows_s, cols_s, k_c, cfg, g: TileGrid):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    gc, n_blocks = g.grid_cols, g.n_blocks
+    kd = jax.random.key_data(k_c)
+    bdims = rows_s.ndim - 1
+
+    def body(wl, upl, dnl, bndl, rl, cl, kdl):
+        k = jax.random.wrap_key_data(kdl)
+        i = jax.lax.axis_index("array_row")
+        j = jax.lax.axis_index("array_col")
+        bk = _block_key(k, i * gc + j, n_blocks)
+        return _block_update(wl, upl, dnl, bndl, rl, cl, bk, cfg)
+
+    blockspec = P("array_row", "array_col")
+    in_specs = (blockspec, blockspec, blockspec, blockspec,
+                P(*([None] * bdims), "array_row"),
+                P(*([None] * bdims), "array_col"),
+                P())
+    mesh = g.mesh()
+    f = shard_map(body, mesh=mesh, in_specs=in_specs,
+                  out_specs=blockspec, check_rep=False)
+    (new_w,) = _replicated(mesh, f(*_replicated(
+        mesh, wp, mp.dw_up, mp.dw_dn, mp.bound, rows_s, cols_s, kd)))
+    return new_w

@@ -123,12 +123,16 @@ def pulse_update(w: Array, maps: DeviceMaps, x: Array, delta: Array,
     """Full update cycle on physical weights: pulses + per-device bound clip.
 
     ``delta`` is the *logical* error vector (..., out_f); replication to the
-    #_d physical row blocks happens here (independent streams per physical
-    row driver).
+    #_d physical row blocks happens here via ``tile.replicate_delta``
+    (independent streams per physical row driver).
     """
-    d = cfg.devices_per_weight
-    if d > 1:
-        delta = jnp.concatenate([delta] * d, axis=-1)
+    from repro.core.tile import _grid_routed, replicate_delta  # avoids cycle
+    delta = replicate_delta(delta, cfg.devices_per_weight,
+                            rows_phys=w.shape[0])
+
+    if _grid_routed(cfg):
+        from repro.core import tile_grid
+        return tile_grid.grid_pulse_update(w, maps, x, delta, key, cfg, lr)
 
     if cfg.use_pallas:
         # fused kernel path: sample streams here (vector op), then one

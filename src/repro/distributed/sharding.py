@@ -69,6 +69,36 @@ def data_mesh(devices: Optional[Sequence[Any]] = None) -> Mesh:
     return Mesh(devs.reshape(-1), ("data",))
 
 
+#: Mesh axis names of the 2-D crossbar tile mesh (row-blocks x col-blocks).
+CROSSBAR_AXES = ("array_row", "array_col")
+
+
+def crossbar_mesh(grid_rows: int, grid_cols: int,
+                  devices: Optional[Sequence[Any]] = None) -> Mesh:
+    """2-D ``'array_row' x 'array_col'`` mesh for a sharded crossbar tile
+    grid (``core/tile_grid.py``): device ``(i, j)`` owns physical sub-tile
+    ``(i, j)`` of the row-block x col-block decomposition of one logical
+    weight.  Uses the first ``grid_rows * grid_cols`` devices; raises when
+    fewer are available (callers fall back to the serial grid oracle)."""
+    import numpy as np
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    need = grid_rows * grid_cols
+    if devs.size < need:
+        raise ValueError(
+            f"crossbar_mesh({grid_rows},{grid_cols}) needs {need} devices, "
+            f"have {devs.size}")
+    return Mesh(devs.reshape(-1)[:need].reshape(grid_rows, grid_cols),
+                CROSSBAR_AXES)
+
+
+def crossbar_rules() -> Rules:
+    """Logical-axis rules for tile-grid placement: the physical row-block
+    dim shards over 'array_row', the contraction (column) dim over
+    'array_col'.  Usable with :func:`spec_for` / :func:`tree_shardings` to
+    place ``TileState.w`` (and its device maps) ahead of the shard_map."""
+    return {"tile_row": "array_row", "tile_col": "array_col"}
+
+
 # --- context -----------------------------------------------------------------
 
 class _Ctx(threading.local):
@@ -105,12 +135,18 @@ def spec_for(axes: Sequence[Optional[str]],
         m = rules.get(name)
         if m is None:
             return None
+        is_tuple = not isinstance(m, str)
         ms = (m,) if isinstance(m, str) else tuple(m)
         ms = tuple(a for a in ms if a not in used)
         used.update(ms)
         if not ms:
             return None
-        return ms if len(ms) > 1 else ms[0]
+        # preserve the rule's form: a tuple entry stays a tuple even when
+        # deduplication (or the rule itself) leaves one axis — PartitionSpec
+        # equality is raw tuple equality, ("data",) != "data"
+        if len(ms) == 1 and not is_tuple:
+            return ms[0]
+        return ms
 
     for a in axes:
         parts.append(None if a is None else resolve(a))

@@ -36,7 +36,16 @@ def _interpret_default() -> bool:
 def noisy_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
               transpose: bool = False) -> Tuple[Array, Array]:
     """Kernel-backed analog MVM with the tile API contract
-    (arbitrary leading batch dims; per-vector saturation flag)."""
+    (arbitrary leading batch dims; per-vector saturation flag).
+
+    This is also the per-shard raw read of the sharded tile grid
+    (``core/tile_grid.py``): each mesh device launches it on its local
+    sub-tile (usually ``n_seg == 1`` — the grid *is* the physical split).
+    The fused ``managed_mvm`` below stays single-device-only there: its
+    in-kernel select acts on the kernel-local saturation flag, while grid
+    semantics require the select on the globally OR-reduced flag
+    (docs/scaling.md), so the sharded path keeps NM/BM in the digital
+    domain around per-phase ``noisy_mvm`` launches."""
     r, c = w.shape
     contraction = r if transpose else c
     limit = cfg.max_array_rows if transpose else cfg.max_array_cols

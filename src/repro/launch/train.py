@@ -4,9 +4,11 @@ Composes every substrate: mesh + logical sharding rules, deterministic
 resumable data pipeline, scan-fused multi-step dispatch (``--engine scan``,
 default — up to ``--scan-chunk`` train steps per XLA dispatch with donated
 carries; ``--engine python`` keeps the legacy one-dispatch-per-step loop as
-the oracle), digital AdamW or analog pulse-SGD (``--analog``), async sharded
-checkpointing, straggler watchdog, preemption-safe shutdown,
-restart-with-retry, optional gradient compression for the DP all-reduce.
+the oracle), digital AdamW or analog pulse-SGD (``--analog``, with
+``--tile-mesh R,C`` sharding every crossbar tile over the 2-D array mesh —
+see docs/scaling.md), async sharded checkpointing, straggler watchdog,
+preemption-safe shutdown, restart-with-retry, optional gradient compression
+for the DP all-reduce.
 
   PYTHONPATH=src python -m repro.launch.train --arch deepseek_7b \
       --smoke --steps 20 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
@@ -62,15 +64,33 @@ def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
           ckpt_every: int = 50, multi_pod: bool = False,
           lr: float = 3e-4, log_every: int = 1, seed: int = 0,
           engine: str = "scan", scan_chunk: int = 10,
-          bm_mode: str = "iterative", use_pallas: bool = False):
+          bm_mode: str = "iterative", use_pallas: bool = False,
+          tile_mesh: Optional[str] = None):
     import dataclasses
     cfg = registry.get_config(arch, smoke=smoke)
     if analog:
         from repro.core.device import rpu_nm_bm_um_bl1
         rpu = dataclasses.replace(rpu_nm_bm_um_bl1(), bm_mode=bm_mode,
                                   use_pallas=use_pallas)
+        if tile_mesh:
+            try:
+                gr, gc = (int(v) for v in tile_mesh.split(","))
+            except ValueError:
+                raise ValueError(
+                    f"--tile-mesh expects 'R,C' (two comma-separated "
+                    f"integers), got {tile_mesh!r}") from None
+            rpu = rpu.with_tile_grid(gr, gc)
+            from repro.core import tile_grid
+            placed = tile_grid.grid_is_sharded(rpu)
+            print(f"[train] tile grid {gr}x{gc}: "
+                  + (f"sharded over crossbar_mesh({gr},{gc})" if placed else
+                     f"serial oracle ({jax.device_count()} device(s) "
+                     f"< {gr * gc} sub-tiles)"))
         cfg = dataclasses.replace(cfg, analog=rpu,
                                   param_dtype=jnp.float32)
+    elif tile_mesh:
+        raise ValueError("--tile-mesh requires --analog (it shards the "
+                         "analog crossbar tiles, not fp weights)")
 
     mesh, rules = build_mesh_and_rules(smoke, multi_pod)
     pipeline = SyntheticTokenSource(TokenPipelineConfig(
@@ -193,13 +213,18 @@ def main():
     ap.add_argument("--use-pallas", action="store_true",
                     help="route analog reads/updates through the Pallas "
                          "kernels (fused managed read for two_phase/off BM)")
+    ap.add_argument("--tile-mesh", type=str, default=None, metavar="R,C",
+                    help="with --analog: decompose every analog tile into an "
+                         "RxC sub-tile grid on the 'array_row' x 'array_col' "
+                         "crossbar device mesh (serial oracle when fewer "
+                         "than R*C devices; see docs/scaling.md)")
     args = ap.parse_args()
     res = train(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
                 smoke=args.smoke, analog=args.analog,
                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                 multi_pod=args.multi_pod, lr=args.lr, engine=args.engine,
                 scan_chunk=args.scan_chunk, bm_mode=args.bm_mode,
-                use_pallas=args.use_pallas)
+                use_pallas=args.use_pallas, tile_mesh=args.tile_mesh)
     print(f"[train] done; final loss {res['final_loss']:.4f}")
 
 

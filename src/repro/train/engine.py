@@ -107,6 +107,30 @@ def data_parallel_grads(grads_fn: Callable) -> Callable:
     return wrapped
 
 
+def _reject_crossbar_mesh_conflict(cfg) -> None:
+    """Fail fast when data-parallel shard_map and a *sharded* crossbar tile
+    grid would claim the same devices.
+
+    ``data_parallel_grads`` spans ALL local devices with the 1-D 'data'
+    mesh; a tile grid that can place its 'array_row' x 'array_col' mesh
+    (``core/tile_grid.grid_is_sharded``) would nest a second shard_map over
+    the same devices inside the first — jax rejects the nested mesh, and
+    the composed placement would be wrong anyway.  Pick one: shard the
+    batch (grid falls back to its serial oracle) or shard the tiles.
+    """
+    if getattr(cfg, "mode", None) != "analog" or not getattr(
+            cfg, "layer_cfgs", None):
+        return
+    from repro.core import tile_grid
+    offending = sorted(layer for layer, c in cfg.layer_cfgs.items()
+                       if tile_grid.grid_is_sharded(c))
+    if offending:
+        raise ValueError(
+            f"layers {offending} route through a sharded crossbar tile grid; "
+            "that mesh cannot nest inside the data-parallel 'data' mesh. "
+            "Disable data_parallel or drop tile_grid below the device count.")
+
+
 # ---------------------------------------------------------------------------
 # Scan-fused CNN epoch
 # ---------------------------------------------------------------------------
@@ -121,6 +145,9 @@ def make_cnn_epoch_fn(cfg, opt: Optimizer, *, batch: int,
     donated: the caller must thread the returned values.
     """
     from repro.models import lenet
+
+    if data_parallel:
+        _reject_crossbar_mesh_conflict(cfg)
 
     def grads_of(params, xb, yb, key):
         return jax.grad(lenet.loss_fn, allow_int=True)(
