@@ -165,6 +165,123 @@ def bench_sharded_read(grids=((1, 1), (1, 2), (2, 2), (2, 4)),
 
 
 # ---------------------------------------------------------------------------
+# Streaming conv pipeline: steps/s + peak live (temp) bytes vs chunk size
+# ---------------------------------------------------------------------------
+
+def _temp_bytes(jitted, *args):
+    """XLA buffer-assignment temp allocation of the compiled program — the
+    peak live intermediate bytes (weights/IO excluded)."""
+    return int(jitted.lower(*args).compile().memory_analysis()
+               .temp_size_in_bytes)
+
+
+def bench_conv_stream(chunks=(None, 64, 256, 1024), batches=(8, 32),
+                      steps=8):
+    """Streaming conv pipeline sweep: LeNet analog train step throughput
+    and peak live bytes vs ``conv_stream_chunk``/``update_chunk``.
+
+    Two measurements per (batch, chunk):
+
+    * full train step — steps/s (timed, post-compile) and XLA temp bytes
+      of the jitted step program (the epoch/scan engines wrap the same
+      step, so its temp size is the per-step live-memory envelope);
+    * isolated conv update cycle (K1 geometry, batch x 576 position
+      columns) — temp bytes materialized vs chunked: the signed
+      pulse-stream tensors dominate this cycle (~BL x columns), which is
+      the acceptance metric (>= 4x reduction at equal steps/s).
+
+    Chunked training is bit-identical to chunk=None (tests/
+    test_conv_stream.py), so this sweep trades nothing but wall-clock.
+
+    Run:  PYTHONPATH=src python benchmarks/bm_train_engine.py --conv-stream
+    """
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.core import device as dev
+    from repro.core import update as update_lib
+    from repro.core.device import RPUConfig, sample_device_maps
+    from repro.data import mnist
+    from repro.models.lenet import LeNetConfig
+    from repro.train import cnn
+
+    base = dataclasses.replace(dev.rpu_nm_bm(), bm_mode="two_phase")
+    out = {"workload": {"model": "LeNet/MNIST analog (NM + two-phase BM)",
+                        "chunks": [c or 0 for c in chunks],
+                        "batches": list(batches)},
+           "train_step": {}, "update_cycle": {}}
+
+    (xtr, ytr), _ = mnist.load_splits(max(batches) * 8, 128, seed=0,
+                                      verbose=False)
+    for batch in batches:
+        xb, yb = jnp.asarray(xtr[:batch]), jnp.asarray(ytr[:batch])
+        for chunk in chunks:
+            rpu = (base if chunk is None
+                   else base.with_streaming(chunk, chunk))
+            cfg = LeNetConfig.uniform(rpu, mode="analog")
+            step, opt = cnn.make_train_step(cfg)
+            from repro.models import lenet
+            params = lenet.init(jax.random.key(0), cfg)
+            opt_state = opt.init(params)
+            key = jax.random.key(1)
+            temp = _temp_bytes(step, params, opt_state, xb, yb, key)
+            params, opt_state = step(params, opt_state, xb, yb, key)
+            jax.block_until_ready(params["W4"].w)
+            t0 = time.time()
+            for s in range(steps):
+                params, opt_state = step(params, opt_state, xb, yb,
+                                         jax.random.fold_in(key, s))
+            jax.block_until_ready(params["W4"].w)
+            rate = steps / (time.time() - t0)
+            tag = f"batch{batch}_chunk{chunk or 'none'}"
+            out["train_step"][tag] = {"steps_per_sec": rate,
+                                      "temp_bytes": temp}
+            print(f"[conv-stream] batch {batch:3d} chunk {str(chunk):>5s}: "
+                  f"{rate:6.2f} steps/s  temp {temp / 1e6:8.2f} MB",
+                  flush=True)
+
+    # isolated K1 update cycle: the pulse-stream memory wall
+    rpu0 = base
+    w = jax.random.uniform(jax.random.key(2), (16, 26), minval=-.3,
+                           maxval=.3)
+    maps = sample_device_maps(jax.random.key(3), 16, 26, rpu0)
+    for batch in batches:
+        t = batch * 576                      # K1 positions per image
+        x = jax.random.normal(jax.random.key(4), (t, 26)) * 0.5
+        d = jax.random.normal(jax.random.key(5), (t, 16)) * 0.1
+        row = {}
+        for chunk in chunks:
+            rpu = dataclasses.replace(rpu0, update_chunk=chunk)
+
+            def f(w, x, d, rpu=rpu):
+                return update_lib.pulse_update(w, maps, x, d,
+                                               jax.random.key(6), rpu, 0.01)
+
+            jf = jax.jit(f)
+            temp = _temp_bytes(jf, w, x, d)
+            y = jf(w, x, d)
+            jax.block_until_ready(y)
+            t0 = time.time()
+            for _ in range(max(2, steps)):
+                y = jf(w, x, d)
+            jax.block_until_ready(y)
+            rate = max(2, steps) / (time.time() - t0)
+            row[f"chunk{chunk or 'none'}"] = {
+                "temp_bytes": temp, "updates_per_sec": rate}
+            print(f"[conv-update] batch {batch:3d} chunk {str(chunk):>5s}: "
+                  f"temp {temp / 1e6:8.2f} MB  {rate:6.1f} cycles/s",
+                  flush=True)
+        mat = row["chunknone"]["temp_bytes"]
+        best = min(v["temp_bytes"] for k, v in row.items()
+                   if k != "chunknone")
+        row["reduction_x"] = mat / max(1, best)
+        out["update_cycle"][f"batch{batch}"] = row
+        print(f"[conv-update] batch {batch:3d}: peak live bytes "
+              f"reduction {row['reduction_x']:.1f}x", flush=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Managed-read microbenchmark: physical-read launch counts + steps/sec
 # ---------------------------------------------------------------------------
 
@@ -327,7 +444,24 @@ def main():
                     help="only run the sharded tile-grid read benchmark "
                          "(set XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=8 to exercise the shard_map path)")
+    ap.add_argument("--conv-stream", action="store_true",
+                    help="only run the streaming-conv sweep: steps/s and "
+                         "peak live (temp) bytes vs conv_stream_chunk/"
+                         "update_chunk and batch (docs/benchmarks.md)")
     args = ap.parse_args()
+
+    if args.conv_stream:
+        out = {"conv_stream": bench_conv_stream()}
+        if os.path.exists(RESULTS):
+            with open(RESULTS) as f:
+                prior = json.load(f)
+            prior["conv_stream"] = out["conv_stream"]
+            out = prior
+        os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+        with open(RESULTS, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"[bench] wrote {RESULTS}")
+        return
 
     if args.grid_only:
         out = {"sharded_read": bench_sharded_read()}

@@ -1,4 +1,4 @@
-"""Conv -> crossbar mapping (the paper's contribution C1).
+"""Conv -> crossbar mapping (the paper's contribution C1), streamed.
 
 A convolutional layer with kernels ``(M, k, k, d)`` is flattened to a
 parameter matrix ``K`` of size ``M x (k^2 d [+1 bias])``; the input volume is
@@ -8,30 +8,61 @@ rearranged into the im2col matrix ``X (k^2 d x positions)`` so that
     backward  Z = K^T D          (then digital col2im scatter-add)
     update    K <- K + eta D X^T (serial rank-1 pulse updates per column)
 
-We realise this by composing the *differentiable* im2col rearrangement with
-the analog linear layer: the analog layer's custom VJP performs the paper's
-backward/update cycles over the flattened ``batch x positions`` axis (the
-serial column streaming), while autodiff of the im2col primitive provides the
-exact digital col2im for the activation gradient — the paper's "results are
-organized to a volume" step, which is digital data movement, not array math.
+The paper streams the position columns *serially* through the array; the
+analog path here does the same digitally: a custom-VJP driver walks the
+``batch x positions`` axis in chunks of ``cfg.conv_stream_chunk`` columns
+and feeds each chunk through the three cycles without ever materializing
+the full ``(B, H', W', C k^2)`` patch matrix or the ``~BL x`` larger signed
+pulse-stream tensors — only one chunk of columns/streams is live at a time:
 
-Supports stride, padding, dilation and non-square inputs/kernels, as the
-paper notes the mapping generalises to.
+* **forward** — each chunk is gathered from the activation volume and read
+  through ``tile.tile_forward`` with the chunk's global row offset, so the
+  noise/NM/BM draws are bit-identical to the one-shot managed read (NM/BM
+  scales are per-column; counter-offset fastrng supplies the chunk's rows'
+  exact noise).  Under ``cfg.use_pallas`` the implicit-im2col kernel
+  (``kernels/conv_mvm.py``) gathers the patch tiles in VMEM instead.
+* **backward** — transpose-read chunks scatter-add into the volume
+  cotangent through a *deterministic* col2im whose per-pixel accumulation
+  order (descending tap) is invariant to the chunk size, so chunked and
+  materialized backward cycles agree bit-for-bit.
+* **update** — per-chunk coincidence counts accumulate exactly (integer
+  sums over the contraction axis); device maps, cycle-to-cycle noise and
+  the per-device bound clip land once at the end, exactly where the
+  materialized cycle applies them (``update.pulse_update_streamed``).
+
+``conv_stream_chunk=None`` runs a single chunk — the materialized path —
+and is the bit-parity oracle for every chunked configuration with a
+fixed-latency BM mode (off / two-phase; tests/test_conv_stream.py).  The
+one exception is *iterative* BM with read noise: its halve-and-retry
+while_loop decides re-reads from the whole call batch, so chunked loops
+become chunk-local — per-vector retry scales are unchanged and results
+are distribution-identical (bit-exact when noise-free), but not bitwise
+equal to the materialized run.  ``mode='digital'`` keeps the
+differentiable im2col + FP dense path.
+
+Supports stride, padding (named or explicit per-dim pairs), dilation and
+non-square inputs/kernels, as the paper notes the mapping generalises to.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import functools
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import analog_linear
-from repro.core.device import RPUConfig
+from repro.core import tile as tile_lib
+from repro.core import update as update_lib
+from repro.core.device import RPUConfig, sample_device_maps
 from repro.core.tile import TileState
 
 Array = jax.Array
 IntPair = Union[int, Tuple[int, int]]
+Padding = Union[str, Sequence[Tuple[int, int]]]
 
 
 def _pair(v: IntPair) -> Tuple[int, int]:
@@ -133,14 +164,350 @@ def init(key: Array, in_channels: int, out_channels: int, kernel: IntPair,
         init_scale=init_scale)
 
 
-def apply(state: TileState, x: Array, key: Array, cfg: RPUConfig, lr: Array,
-          *, kernel: IntPair, stride: IntPair = 1, padding: str = "VALID",
-          dilation: IntPair = 1, bias: bool = True,
-          mode: str = "analog") -> Array:
-    """Analog 2-D convolution: im2col + analog linear over position columns.
+# ---------------------------------------------------------------------------
+# Static conv geometry (hashable — lives in the custom_vjp nondiff args)
+# ---------------------------------------------------------------------------
 
-    ``x``: (B, H, W, C) -> (B, H', W', M).
+@dataclasses.dataclass(frozen=True)
+class ConvGeom:
+    """Resolved static geometry of one conv application.
+
+    ``h``/``w`` are the *padded* input dims (explicit pads resolved from the
+    ``padding`` argument with the same arithmetic :func:`im2col` uses, so
+    the streamed and materialized paths see identical output shapes).
     """
-    patches = im2col(x, kernel, stride, padding, dilation)
-    return analog_linear.apply(state, patches, key, cfg, lr,
-                               bias=bias, mode=mode)
+
+    kh: int; kw: int
+    sh: int; sw: int
+    dh: int; dw: int
+    pads: Tuple[Tuple[int, int], Tuple[int, int]]   # ((top, bot), (l, r))
+    b: int; h: int; w: int; c: int                  # padded volume
+    oh: int; ow: int
+    bias: bool
+
+    @property
+    def positions(self) -> int:
+        return self.b * self.oh * self.ow
+
+    @property
+    def features(self) -> int:
+        return self.c * self.kh * self.kw
+
+    @property
+    def cols(self) -> int:
+        return self.features + (1 if self.bias else 0)
+
+    @property
+    def taps(self):
+        """(ih, iw) kernel taps in ascending (row-major) order."""
+        return [(ih, iw) for ih in range(self.kh) for iw in range(self.kw)]
+
+    def tap_slice(self, xpad: Array, ih: int, iw: int) -> Array:
+        """The (B, OH, OW, C) strided view of the padded volume feeding
+        tap ``(ih, iw)`` — one slice of the slice-stack im2col."""
+        r0, c0 = ih * self.dh, iw * self.dw
+        return jax.lax.slice(
+            xpad, (0, r0, c0, 0),
+            (self.b, r0 + (self.oh - 1) * self.sh + 1,
+             c0 + (self.ow - 1) * self.sw + 1, self.c),
+            (1, self.sh, self.sw, 1))
+
+
+def conv_geometry(x_shape: Tuple[int, ...], kernel: IntPair,
+                  stride: IntPair = 1, padding: Padding = "VALID",
+                  dilation: IntPair = 1, bias: bool = True) -> ConvGeom:
+    """Resolve the static geometry (same padding arithmetic as im2col)."""
+    kh, kw = _pair(kernel)
+    sh, sw = _pair(stride)
+    dh, dw = _pair(dilation)
+    b, h, w, c = x_shape
+    ekh, ekw = (kh - 1) * dh + 1, (kw - 1) * dw + 1
+    if not isinstance(padding, str):
+        (pt, pb), (pl, pr) = ((int(a), int(b_)) for a, b_ in padding)
+    elif padding.upper() == "SAME":
+        oh, ow = -(-h // sh), -(-w // sw)
+        ph = max(0, (oh - 1) * sh + ekh - h)
+        pw = max(0, (ow - 1) * sw + ekw - w)
+        pt, pb, pl, pr = ph // 2, ph - ph // 2, pw // 2, pw - pw // 2
+    elif padding.upper() == "VALID":
+        pt = pb = pl = pr = 0
+    else:
+        raise ValueError(f"unsupported padding {padding!r}")
+    hp, wp = h + pt + pb, w + pl + pr
+    oh, ow = (hp - ekh) // sh + 1, (wp - ekw) // sw + 1
+    return ConvGeom(kh=kh, kw=kw, sh=sh, sw=sw, dh=dh, dw=dw,
+                    pads=((pt, pb), (pl, pr)), b=b, h=hp, w=wp, c=c,
+                    oh=oh, ow=ow, bias=bias)
+
+
+def _pad_volume(x: Array, geom: ConvGeom) -> Array:
+    (pt, pb), (pl, pr) = geom.pads
+    if pt == pb == pl == pr == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (pt, pb), (pl, pr), (0, 0)))
+
+
+def _position_indices(geom: ConvGeom, start, chunk: int):
+    """Decompose positions ``[start, start + chunk)`` into (b, i, j) plus
+    the validity mask (rows past the last position are clamped + masked)."""
+    p = jnp.asarray(start, jnp.int32) + jnp.arange(chunk, dtype=jnp.int32)
+    valid = p < geom.positions
+    p = jnp.minimum(p, geom.positions - 1)
+    per_img = geom.oh * geom.ow
+    b_idx = p // per_img
+    r = p - b_idx * per_img
+    return b_idx, r // geom.ow, r % geom.ow, valid
+
+
+def gather_columns(xpad: Array, geom: ConvGeom, start, chunk: int) -> Array:
+    """Materialize one chunk of im2col columns ``(chunk, cols)`` from the
+    padded activation volume (channel-major feature order, bias ones
+    appended) — the only patch storage the streaming path ever creates.
+    Rows past the last position are zero (they drive nothing)."""
+    b_idx, i, j, valid = _position_indices(geom, start, chunk)
+    rowi = (i[:, None, None] * geom.sh
+            + (np.arange(geom.kh) * geom.dh)[None, :, None])   # (chunk, kh, 1)
+    coli = (j[:, None, None] * geom.sw
+            + (np.arange(geom.kw) * geom.dw)[None, None, :])   # (chunk, 1, kw)
+    g = xpad[b_idx[:, None, None], rowi, coli, :]          # (chunk, kh, kw, C)
+    g = jnp.moveaxis(g, -1, 1).reshape(chunk, geom.features)
+    if geom.bias:
+        g = jnp.concatenate([g, jnp.ones((chunk, 1), g.dtype)], axis=1)
+    return jnp.where(valid[:, None], g, 0)
+
+
+def window_absmax(xpad: Array, geom: ConvGeom) -> Array:
+    """Per-position ``max|patch row|`` (over channels and taps) computed as
+    a running max over the kh*kw strided slices — no patch materialization,
+    order-exact (max is associative), shape (B, OH, OW)."""
+    m = None
+    for ih, iw in geom.taps:
+        s = jnp.max(jnp.abs(geom.tap_slice(xpad, ih, iw)), axis=-1)
+        m = s if m is None else jnp.maximum(m, s)
+    return m
+
+
+def col2im_add(z: Array, geom: ConvGeom, start, chunk: int,
+               xbar: Array) -> Array:
+    """Scatter-add one chunk's transpose-read columns ``(chunk, features)``
+    into the padded volume cotangent.
+
+    Taps are applied in DESCENDING order: a pixel's contributing positions
+    are strictly decreasing in tap order, so ascending-chunk x
+    descending-tap accumulation visits every pixel's contributions in
+    global descending-tap order *regardless of the chunk size* — chunked
+    and materialized backward cycles are bit-identical (f32 addition is
+    not associative; a chunk-dependent order would drift ulps).
+    """
+    b_idx, i, j, valid = _position_indices(geom, start, chunk)
+    z3 = jnp.where(valid[:, None], z, 0).reshape(
+        chunk, geom.c, geom.kh, geom.kw)
+    for ih, iw in reversed(geom.taps):
+        xbar = xbar.at[b_idx, i * geom.sh + ih * geom.dh,
+                       j * geom.sw + iw * geom.dw, :].add(
+            z3[:, :, ih, iw], mode="drop")
+    return xbar
+
+
+# ---------------------------------------------------------------------------
+# Streaming three-cycle driver (the analog path's custom VJP)
+# ---------------------------------------------------------------------------
+
+def _chunking(cfg: RPUConfig, geom: ConvGeom) -> Tuple[int, int]:
+    total = geom.positions
+    chunk = cfg.conv_stream_chunk or total
+    chunk = max(1, min(chunk, total))
+    return chunk, -(-total // chunk)
+
+
+def _conv_nm_scale(xpad: Array, geom: ConvGeom) -> Array:
+    """Per-position NM scale ``(positions, 1)`` — ``management.nm_scale``
+    of the (never materialized) column rows, from the running window max.
+    Order-exact: ``max`` commutes, so this equals the materialized scale
+    bit-for-bit (the bias contributes a constant 1 to every row max)."""
+    from repro.core import management
+    s = window_absmax(xpad, geom).reshape(geom.positions, 1)
+    if geom.bias:
+        return jnp.maximum(s, jnp.asarray(1.0, s.dtype))
+    return jnp.where(s > management._EPS, s, 1.0)
+
+
+def _stream_forward(cfg: RPUConfig, geom: ConvGeom, w: Array, x: Array,
+                    k_f: Array) -> Array:
+    """Forward cycle: managed reads over position-column chunks."""
+    from repro.kernels import conv_mvm  # local: kernels import core
+    xpad = _pad_volume(x, geom)
+    total = geom.positions
+    chunk, nchunks = _chunking(cfg, geom)
+    state = TileState(w=w, maps=None, seed=k_f)  # maps unused in reads
+
+    if conv_mvm.conv_kernel_eligible(cfg, geom, w.shape):
+        from repro.kernels import ops as kops
+        use_nm = cfg.noise_management and cfg.nm_forward
+        nm_s = (_conv_nm_scale(xpad, geom) if use_nm
+                else jnp.ones((total, 1), x.dtype))
+        y2, _ = kops.conv_managed_mvm(w, xpad, geom, nm_s, k_f, cfg)
+        return y2.reshape(geom.b, geom.oh, geom.ow, -1)
+
+    out_f = w.shape[0] // cfg.devices_per_weight
+
+    def body(ci, y):
+        start = ci * chunk
+        cols = gather_columns(xpad, geom, start, chunk)
+        yc = tile_lib.tile_forward(state, cols, k_f, cfg, row_offset=start,
+                                   total_rows=total)
+        return jax.lax.dynamic_update_slice_in_dim(y, yc, start, axis=0)
+
+    y = jnp.zeros((nchunks * chunk, out_f), x.dtype)
+    y = jax.lax.fori_loop(0, nchunks, body, y)
+    return y[:total].reshape(geom.b, geom.oh, geom.ow, out_f)
+
+
+def _stream_backward(cfg: RPUConfig, geom: ConvGeom, w: Array, g: Array,
+                     k_b: Array) -> Array:
+    """Backward cycle: transpose-read chunks + deterministic col2im."""
+    total = geom.positions
+    chunk, nchunks = _chunking(cfg, geom)
+    state = TileState(w=w, maps=None, seed=k_b)
+    out_f = w.shape[0] // cfg.devices_per_weight
+    g2 = g.reshape(total, out_f)
+    pad = nchunks * chunk - total
+    g2p = jnp.pad(g2, ((0, pad), (0, 0)))
+
+    def body(ci, xbar):
+        start = ci * chunk
+        gc = jax.lax.dynamic_slice_in_dim(g2p, start, chunk)
+        zc = tile_lib.tile_backward(state, gc, k_b, cfg, row_offset=start,
+                                    total_rows=total)
+        return col2im_add(zc[:, :geom.features], geom, start, chunk, xbar)
+
+    xbar = jnp.zeros((geom.b, geom.h, geom.w, geom.c), g.dtype)
+    xbar = jax.lax.fori_loop(0, nchunks, body, xbar)
+    (pt, _), (pl, _) = geom.pads
+    hp, wp = geom.h - sum(geom.pads[0]), geom.w - sum(geom.pads[1])
+    return jax.lax.slice(xbar, (0, pt, pl, 0),
+                         (geom.b, pt + hp, pl + wp, geom.c))
+
+
+def _stream_pulse_w_bar(cfg: RPUConfig, geom: ConvGeom, w, maps, x, g, k_u,
+                        lr) -> Array:
+    """Update cycle: streamed pulse update over (column, error) chunks;
+    ``w_bar = w - clip(w + DW_pulse(cols, -g))`` exactly as the dense
+    layer's VJP defines it."""
+    xpad = _pad_volume(x, geom)
+    total = geom.positions
+    chunk, _ = _chunking(cfg, geom)
+    d = cfg.devices_per_weight
+    out_f = w.shape[0] // d
+    g2 = g.reshape(total, out_f)
+    pad = (-(-total // chunk)) * chunk - total
+    g2p = jnp.pad(g2, ((0, pad), (0, 0)))
+
+    um_maxima = None
+    if cfg.update_management:
+        x_max = jnp.max(window_absmax(xpad, geom))
+        if geom.bias:
+            x_max = jnp.maximum(x_max, jnp.asarray(1.0, x_max.dtype))
+        um_maxima = (x_max, jnp.max(jnp.abs(-g2)))
+
+    def get_chunk(s, start, ch):
+        xp, gp = s
+        cols = gather_columns(xp, geom, start, ch)
+        gc = jax.lax.dynamic_slice_in_dim(gp, start, ch)
+        return cols, tile_lib.replicate_delta(-gc, d)
+
+    new_w = update_lib.pulse_update_streamed(
+        w, maps, (xpad, g2p), get_chunk, k_u, cfg, lr, total=total,
+        chunk=chunk, um_maxima=um_maxima)
+    return (w - new_w).astype(w.dtype)
+
+
+# --- seeded device maps ------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _conv_stream_seeded(cfg: RPUConfig, geom: ConvGeom, w, seed, x, key, lr):
+    k_f, _, _ = analog_linear._split3(key)
+    return _stream_forward(cfg, geom, w, x, k_f)
+
+
+def _conv_stream_seeded_fwd(cfg, geom, w, seed, x, key, lr):
+    k_f, _, _ = analog_linear._split3(key)
+    y = _stream_forward(cfg, geom, w, x, k_f)
+    return y, (w, seed, x, key, lr)
+
+
+def _conv_stream_seeded_bwd(cfg, geom, res, g):
+    w, seed, x, key, lr = res
+    _, k_b, k_u = analog_linear._split3(key)
+    x_bar = _stream_backward(cfg, geom, w, g, k_b)
+    maps = sample_device_maps(seed, w.shape[0], w.shape[1], cfg)
+    w_bar = _stream_pulse_w_bar(cfg, geom, w, maps, x, g, k_u, lr)
+    return (w_bar, analog_linear._float0(seed), x_bar,
+            analog_linear._float0(key), jnp.zeros_like(lr))
+
+
+_conv_stream_seeded.defvjp(_conv_stream_seeded_fwd, _conv_stream_seeded_bwd)
+
+
+# --- materialized device maps ------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _conv_stream_mat(cfg: RPUConfig, geom: ConvGeom, w, dw_up, dw_dn, bound,
+                     x, key, lr):
+    k_f, _, _ = analog_linear._split3(key)
+    return _stream_forward(cfg, geom, w, x, k_f)
+
+
+def _conv_stream_mat_fwd(cfg, geom, w, dw_up, dw_dn, bound, x, key, lr):
+    k_f, _, _ = analog_linear._split3(key)
+    y = _stream_forward(cfg, geom, w, x, k_f)
+    return y, (w, dw_up, dw_dn, bound, x, key, lr)
+
+
+def _conv_stream_mat_bwd(cfg, geom, res, g):
+    w, dw_up, dw_dn, bound, x, key, lr = res
+    _, k_b, k_u = analog_linear._split3(key)
+    x_bar = _stream_backward(cfg, geom, w, g, k_b)
+    maps = tile_lib.DeviceMaps(dw_up=dw_up, dw_dn=dw_dn, bound=bound)
+    w_bar = _stream_pulse_w_bar(cfg, geom, w, maps, x, g, k_u, lr)
+    zeros = jnp.zeros_like
+    return (w_bar, zeros(dw_up), zeros(dw_dn), zeros(bound), x_bar,
+            analog_linear._float0(key), jnp.zeros_like(lr))
+
+
+_conv_stream_mat.defvjp(_conv_stream_mat_fwd, _conv_stream_mat_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public layer
+# ---------------------------------------------------------------------------
+
+def apply(state: TileState, x: Array, key: Array, cfg: RPUConfig, lr: Array,
+          *, kernel: IntPair, stride: IntPair = 1,
+          padding: Padding = "VALID", dilation: IntPair = 1,
+          bias: bool = True, mode: str = "analog") -> Array:
+    """Analog 2-D convolution over streamed position columns.
+
+    ``x``: (B, H, W, C) -> (B, H', W', M).  ``padding`` accepts the lax
+    names ('VALID'/'SAME') or explicit per-dim pairs ``((top, bottom),
+    (left, right))``.  Analog mode streams the columns through the three
+    cycles in chunks of ``cfg.conv_stream_chunk`` (None = one chunk — the
+    materialized path); digital mode keeps the differentiable im2col + FP
+    dense path.
+    """
+    if mode == "digital":
+        patches = im2col(x, kernel, stride, padding, dilation)
+        return analog_linear.apply(state, patches, key, cfg, lr,
+                                   bias=bias, mode=mode)
+
+    geom = conv_geometry(x.shape, kernel, stride, padding, dilation, bias)
+    if cfg.conv_stream_chunk is not None and not cfg.fast_rng:
+        raise ValueError("conv_stream_chunk requires cfg.fast_rng (chunk "
+                         "bit-parity needs counter-offset noise)")
+    lr = jnp.asarray(lr, dtype=state.w.dtype)
+    if cfg.seeded_maps or state.maps is None:
+        return _conv_stream_seeded(cfg, geom, state.w, state.seed, x, key,
+                                   lr)
+    m = state.maps
+    return _conv_stream_mat(cfg, geom, state.w, m.dw_up, m.dw_dn, m.bound,
+                            x, key, lr)

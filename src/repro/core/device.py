@@ -76,6 +76,20 @@ class RPUConfig:
     # single-tile path; with fewer devices than blocks the grid runs as the
     # serial single-device oracle (identical numerics, no shard_map).
     tile_grid: Optional[Tuple[int, int]] = None
+    # --- streaming chunk sizes (constant-memory conv/update pipeline) -------
+    # update_chunk: number of (sample x position) vector pairs whose pulse
+    # streams are materialized at once in the update cycle; the per-chunk
+    # coincidence counts accumulate exactly (integer sums), so any chunk
+    # size is bit-identical to the unchunked cycle (None).  Caps the
+    # ~BL x activation blowup of the signed stream tensors.
+    update_chunk: Optional[int] = None
+    # conv_stream_chunk: number of im2col position columns streamed through
+    # the array per chunk in the conv forward/backward read cycles — the
+    # digital analogue of the paper's serial column streaming.  None
+    # materializes all positions at once (one chunk).  Bit-identical to
+    # None for fixed-latency BM; iterative BM's retry loop becomes
+    # chunk-local (see with_streaming).
+    conv_stream_chunk: Optional[int] = None
     # --- implementation switches ---------------------------------------------
     seeded_maps: bool = False          # regenerate device maps from RNG (see module doc)
     dtype: jnp.dtype = jnp.float32     # simulation dtype for weights / MVMs
@@ -114,6 +128,36 @@ class RPUConfig:
         if rows < 1 or cols < 1:
             raise ValueError(f"tile_grid must be >= (1, 1), got {(rows, cols)}")
         return dataclasses.replace(self, tile_grid=(rows, cols))
+
+    def with_streaming(self, update_chunk: Optional[int] = None,
+                       conv_stream_chunk: Optional[int] = None
+                       ) -> "RPUConfig":
+        """Enable the constant-memory streaming pipeline: chunk the update
+        cycle's pulse streams and/or the conv position columns.  A field
+        left ``None`` keeps its current value (to disable a chunk again use
+        ``dataclasses.replace(cfg, update_chunk=None)``).
+
+        Chunked training is bit-identical to the materialized paths for
+        the fixed-latency BM modes (off / two-phase); iterative BM's
+        retry loop becomes chunk-local — distribution-identical, and
+        bit-exact only when read noise is off (docs/architecture.md).
+        Requires ``fast_rng`` — the chunks' noise uses counter-offset
+        draws."""
+        for name, v in (("update_chunk", update_chunk),
+                        ("conv_stream_chunk", conv_stream_chunk)):
+            if v is not None and v < 1:
+                raise ValueError(f"{name} must be >= 1, got {v}")
+        if (update_chunk or conv_stream_chunk) and not self.fast_rng:
+            raise ValueError(
+                "streaming chunks require fast_rng=True (threefry draws "
+                "cannot be counter-offset for chunk bit-parity)")
+        return dataclasses.replace(
+            self,
+            update_chunk=(self.update_chunk if update_chunk is None
+                          else update_chunk),
+            conv_stream_chunk=(self.conv_stream_chunk
+                               if conv_stream_chunk is None
+                               else conv_stream_chunk))
 
     @property
     def amplification(self) -> None:

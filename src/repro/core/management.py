@@ -212,6 +212,26 @@ def amplification_factors(cfg: RPUConfig, lr: float) -> float:
     return (lr / (cfg.bl * cfg.dw_min)) ** 0.5
 
 
+def um_factors_from_max(x_max: Array, d_max: Array, cfg: RPUConfig,
+                        lr: float, dtype) -> Tuple[Array, Array]:
+    """Update-management pulse gains from precomputed scalar extrema.
+
+    The streaming conv pipeline computes ``max|x|`` over the im2col columns
+    without materializing them (a running window max over the activation
+    volume); since ``max`` is order-exact, the gains here are bit-identical
+    to :func:`um_factors` over the materialized column matrix.
+    """
+    c = amplification_factors(cfg, lr)
+    if not cfg.update_management:
+        return jnp.asarray(c, dtype), jnp.asarray(c, dtype)
+    x_max = jnp.maximum(x_max, _EPS)
+    d_max = jnp.maximum(d_max, _EPS)
+    m = jnp.sqrt(d_max / x_max)
+    # Guard against degenerate extremes early in training (all-zero errors).
+    m = jnp.clip(m, 1e-3, 1e3)
+    return (c * m).astype(dtype), (c / m).astype(dtype)
+
+
 def um_factors(x: Array, d: Array, cfg: RPUConfig, lr: float,
                ) -> Tuple[Array, Array]:
     """Update-management pulse gains.
@@ -225,12 +245,8 @@ def um_factors(x: Array, d: Array, cfg: RPUConfig, lr: float,
     max is taken over every axis (the paper's scheme uses the scalar extrema
     of the two vectors fed to the array).
     """
-    c = amplification_factors(cfg, lr)
     if not cfg.update_management:
+        c = amplification_factors(cfg, lr)
         return jnp.asarray(c, x.dtype), jnp.asarray(c, x.dtype)
-    x_max = jnp.maximum(jnp.max(jnp.abs(x)), _EPS)
-    d_max = jnp.maximum(jnp.max(jnp.abs(d)), _EPS)
-    m = jnp.sqrt(d_max / x_max)
-    # Guard against degenerate extremes early in training (all-zero errors).
-    m = jnp.clip(m, 1e-3, 1e3)
-    return (c * m).astype(x.dtype), (c / m).astype(x.dtype)
+    return um_factors_from_max(jnp.max(jnp.abs(x)), jnp.max(jnp.abs(d)),
+                               cfg, lr, x.dtype)

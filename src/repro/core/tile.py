@@ -35,6 +35,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.device import DeviceMaps, RPUConfig, sample_device_maps
 from repro.core import management
@@ -125,13 +126,19 @@ def _num_splits(contraction_dim: int, limit: int) -> int:
 
 
 def analog_mvm(w: Array, x: Array, key: jax.Array, cfg: RPUConfig,
-               *, transpose: bool = False) -> Tuple[Array, Array]:
+               *, transpose: bool = False, row_offset=None,
+               total_rows: Optional[int] = None) -> Tuple[Array, Array]:
     """One physical array read: ``y = clip(W x + sigma*xi, +-alpha)``.
 
     Args:
       w: physical weights ``(R, C)``.
       x: inputs ``(..., C)`` (or ``(..., R)`` when ``transpose``).
       transpose: backward-cycle read ``z = W^T d`` (inputs on the rows).
+      row_offset/total_rows: streaming-chunk noise discipline — ``x`` is
+        rows ``[row_offset, row_offset + chunk)`` of a logical batch of
+        ``total_rows`` input vectors, and the read draws the *same* noise
+        those rows would draw in the unchunked call (counter-offset
+        fastrng; requires ``cfg.fast_rng``).  Default: unchunked.
 
     Returns ``(y, sat)`` where ``sat`` is a per-vector bool: any output
     channel of any partial read hit the integrator bound.  Contraction-dim
@@ -140,13 +147,20 @@ def analog_mvm(w: Array, x: Array, key: jax.Array, cfg: RPUConfig,
     """
     if cfg.use_pallas:
         from repro.kernels import ops as kops
-        return kops.noisy_mvm(w, x, key, cfg, transpose=transpose)
-    return analog_mvm_reference(w, x, key, cfg, transpose=transpose)
+        return kops.noisy_mvm(w, x, key, cfg, transpose=transpose,
+                              row_offset=row_offset, total_rows=total_rows)
+    return analog_mvm_reference(w, x, key, cfg, transpose=transpose,
+                                row_offset=row_offset, total_rows=total_rows)
 
 
 def analog_mvm_reference(w: Array, x: Array, key: jax.Array, cfg: RPUConfig,
-                         *, transpose: bool = False) -> Tuple[Array, Array]:
+                         *, transpose: bool = False, row_offset=None,
+                         total_rows: Optional[int] = None
+                         ) -> Tuple[Array, Array]:
     """Pure-jnp analog MVM (the oracle for the Pallas kernel)."""
+    if row_offset is not None and not cfg.fast_rng:
+        raise ValueError("chunked reads (row_offset) require cfg.fast_rng: "
+                         "threefry draws cannot be counter-offset")
     r, c = w.shape
     if transpose:
         contraction, limit = r, cfg.max_array_rows
@@ -163,10 +177,15 @@ def analog_mvm_reference(w: Array, x: Array, key: jax.Array, cfg: RPUConfig,
     noise = cfg.read_noise if (cfg.noise_backward if transpose
                                else cfg.noise_forward) else 0.0
 
-    def _normal(k, shape):
+    def _normal(k, shape, per_row):
         if cfg.fast_rng:
             from repro.utils import fastrng
-            return fastrng.normal(k, shape, dtype=x.dtype)
+            off = (None if row_offset is None
+                   else jnp.asarray(row_offset, jnp.uint32)
+                   * np.uint32(per_row & 0xFFFFFFFF))
+            tot = None if total_rows is None else total_rows * per_row
+            return fastrng.normal(k, shape, dtype=x.dtype, offset=off,
+                                  total=tot)
         return jax.random.normal(k, shape, dtype=x.dtype)
 
     if s == 1:
@@ -174,7 +193,7 @@ def analog_mvm_reference(w: Array, x: Array, key: jax.Array, cfg: RPUConfig,
                              preferred_element_type=jnp.float32)
         y_clean = y_clean.astype(x.dtype)
         if noise > 0.0:
-            y_noisy = y_clean + noise * _normal(key, y_clean.shape)
+            y_noisy = y_clean + noise * _normal(key, y_clean.shape, out_dim)
         else:
             y_noisy = y_clean
         sat = jnp.any(jnp.abs(y_noisy) >= alpha, axis=-1)
@@ -191,7 +210,7 @@ def analog_mvm_reference(w: Array, x: Array, key: jax.Array, cfg: RPUConfig,
     partial = jnp.einsum("...sk,osk->...so", xs, ws,
                          preferred_element_type=jnp.float32).astype(x.dtype)
     if noise > 0.0:
-        partial = partial + noise * _normal(key, partial.shape)
+        partial = partial + noise * _normal(key, partial.shape, s * out_dim)
     sat = jnp.any(jnp.abs(partial) >= alpha, axis=(-1, -2))
     partial = jnp.clip(partial, -alpha, alpha)
     y = jnp.sum(partial, axis=-2)
@@ -209,17 +228,22 @@ def _bm_is_iterative(cfg: RPUConfig) -> bool:
 
 
 def managed_mvm_reference(w: Array, x: Array, key: jax.Array, cfg: RPUConfig,
-                          *, transpose: bool = False,
-                          backward: bool = False) -> Tuple[Array, Array]:
+                          *, transpose: bool = False, backward: bool = False,
+                          row_offset=None, total_rows: Optional[int] = None
+                          ) -> Tuple[Array, Array]:
     """Pure-jnp managed read: NM scale (once) + BM over raw physical reads.
 
     This is the oracle for ``kernels.managed_mvm_pallas`` — same key
     discipline, same counter-hash noise per read, same select-on-saturation.
     Returns ``(y_phys, residual_sat)`` on *physical* output channels (the
     #_d replica average is the caller's digital step).
+    ``row_offset``/``total_rows`` follow the :func:`analog_mvm` streaming
+    contract (chunked reads draw the unchunked rows' noise).
     """
     def mvm(xx, kk):
-        return analog_mvm_reference(w, xx, kk, cfg, transpose=transpose)
+        return analog_mvm_reference(w, xx, kk, cfg, transpose=transpose,
+                                    row_offset=row_offset,
+                                    total_rows=total_rows)
 
     return management.with_management(mvm, x, key, cfg, backward=backward)
 
@@ -259,7 +283,8 @@ def _grid_routed(cfg: RPUConfig) -> bool:
 
 
 def tile_forward(state: TileState, x: Array, key: jax.Array,
-                 cfg: RPUConfig, *, return_sat: bool = False):
+                 cfg: RPUConfig, *, return_sat: bool = False,
+                 row_offset=None, total_rows: Optional[int] = None):
     """Forward cycle ``y = W_eff x`` with NM/BM management + replica average.
 
     With ``cfg.use_pallas`` and a fixed-latency BM mode (off or two-phase)
@@ -269,22 +294,29 @@ def tile_forward(state: TileState, x: Array, key: jax.Array,
 
     ``return_sat`` additionally returns the per-vector residual-saturation
     flag (True where management could not recover an unclipped read).
+    ``row_offset``/``total_rows`` implement the streaming-chunk read
+    contract of :func:`analog_mvm` (the conv pipeline feeds position-column
+    chunks; each draws exactly the noise its rows would draw unchunked).
     """
     d = cfg.devices_per_weight
 
     if _grid_routed(cfg):
         from repro.core import tile_grid  # local import, avoids cycle
         return tile_grid.grid_tile_forward(state, x, key, cfg,
-                                           return_sat=return_sat)
+                                           return_sat=return_sat,
+                                           row_offset=row_offset,
+                                           total_rows=total_rows)
 
     if cfg.use_pallas and not _bm_is_iterative(cfg):
         from repro.kernels import ops as kops
         y, sat = kops.managed_mvm(state.w, x, key, cfg, transpose=False,
-                                  backward=False)
+                                  backward=False, row_offset=row_offset,
+                                  total_rows=total_rows)
         return (y, sat) if return_sat else y
 
     def mvm(xx, kk):
-        return analog_mvm(state.w, xx, kk, cfg, transpose=False)
+        return analog_mvm(state.w, xx, kk, cfg, transpose=False,
+                          row_offset=row_offset, total_rows=total_rows)
 
     y_phys, sat = management.with_management(mvm, x, key, cfg, backward=False)
     y = _replica_mean(y_phys, d)
@@ -292,12 +324,14 @@ def tile_forward(state: TileState, x: Array, key: jax.Array,
 
 
 def tile_backward(state: TileState, delta: Array, key: jax.Array,
-                  cfg: RPUConfig, *, return_sat: bool = False):
+                  cfg: RPUConfig, *, return_sat: bool = False,
+                  row_offset=None, total_rows: Optional[int] = None):
     """Backward cycle ``z = W_eff^T delta`` (transpose read, NM on inputs).
 
     With multi-device mapping the error vector drives all #_d replica row
     blocks simultaneously; the analog column currents sum over replicas and
-    the digital domain divides by #_d.  Routing mirrors ``tile_forward``.
+    the digital domain divides by #_d.  Routing mirrors ``tile_forward``
+    (including the streaming ``row_offset``/``total_rows`` contract).
     """
     d = cfg.devices_per_weight
     delta = replicate_delta(delta, d, rows_phys=state.w.shape[0])
@@ -305,15 +339,19 @@ def tile_backward(state: TileState, delta: Array, key: jax.Array,
     if _grid_routed(cfg):
         from repro.core import tile_grid  # local import, avoids cycle
         return tile_grid.grid_tile_backward(state, delta, key, cfg,
-                                            return_sat=return_sat)
+                                            return_sat=return_sat,
+                                            row_offset=row_offset,
+                                            total_rows=total_rows)
 
     if cfg.use_pallas and not _bm_is_iterative(cfg):
         from repro.kernels import ops as kops
         z, sat = kops.managed_mvm(state.w, delta, key, cfg, transpose=True,
-                                  backward=True)
+                                  backward=True, row_offset=row_offset,
+                                  total_rows=total_rows)
     else:
         def mvm(dd, kk):
-            return analog_mvm(state.w, dd, kk, cfg, transpose=True)
+            return analog_mvm(state.w, dd, kk, cfg, transpose=True,
+                              row_offset=row_offset, total_rows=total_rows)
 
         z, sat = management.with_management(mvm, delta, key, cfg,
                                             backward=True)

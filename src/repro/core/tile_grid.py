@@ -59,6 +59,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import management
 from repro.core import tile as tile_lib
@@ -191,7 +192,9 @@ def _replicated(mesh, *arrays):
 
 def grid_analog_mvm_reference(w: Array, x: Array, key: Array, cfg: RPUConfig,
                               grid: Optional[TileGrid] = None, *,
-                              transpose: bool = False) -> Tuple[Array, Array]:
+                              transpose: bool = False, row_offset=None,
+                              total_rows: Optional[int] = None
+                              ) -> Tuple[Array, Array]:
     """Serial single-device oracle of the sharded grid read.
 
     Iterates the sub-tile grid in row-major block order; block ``(i, j)``
@@ -199,7 +202,8 @@ def grid_analog_mvm_reference(w: Array, x: Array, key: Array, cfg: RPUConfig,
     any residual intra-block physical split) with its fold_in key.  Partial
     outputs accumulate over the contraction blocks in index order (the same
     left-fold order the mesh psum applies) and the saturation flag is the
-    OR over every block.
+    OR over every block.  ``row_offset``/``total_rows`` follow the
+    streaming-chunk contract of ``tile.analog_mvm`` per block read.
     """
     g = grid if grid is not None else TileGrid.for_tile(w.shape, cfg)
     wp = g.pad_w(w)
@@ -222,7 +226,9 @@ def grid_analog_mvm_reference(w: Array, x: Array, key: Array, cfg: RPUConfig,
                     (k + 1) * (br if transpose else bc)]
             bk = _block_key(key, i * g.grid_cols + j, g.n_blocks)
             yb, satb = tile_lib.analog_mvm(wb, xin, bk, cfg,
-                                           transpose=transpose)
+                                           transpose=transpose,
+                                           row_offset=row_offset,
+                                           total_rows=total_rows)
             y_o = yb if y_o is None else y_o + yb
             sat = satb if sat is None else jnp.logical_or(sat, satb)
         out_chunks.append(y_o)
@@ -232,13 +238,18 @@ def grid_analog_mvm_reference(w: Array, x: Array, key: Array, cfg: RPUConfig,
 
 def grid_analog_mvm_sharded(w: Array, x: Array, key: Array, cfg: RPUConfig,
                             grid: Optional[TileGrid] = None, *,
-                            transpose: bool = False) -> Tuple[Array, Array]:
+                            transpose: bool = False, row_offset=None,
+                            total_rows: Optional[int] = None
+                            ) -> Tuple[Array, Array]:
     """One shard round of the raw grid read on the crossbar mesh.
 
     Device ``(i, j)`` reads its local sub-tile, the clipped partials are
     psum'd along the contraction mesh axis, and the per-vector saturation
     flag is OR-reduced (as a psum of counts) over *both* axes so every
-    device returns the identical global flag.
+    device returns the identical global flag.  A streaming chunk
+    (``row_offset``/``total_rows``) is one shard round like any other read
+    — one psum per chunk round, with the chunk's noise counters offset so
+    the round is bit-identical to the same rows of an unchunked round.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -252,13 +263,17 @@ def grid_analog_mvm_sharded(w: Array, x: Array, key: Array, cfg: RPUConfig,
     gc = g.grid_cols
     n_blocks = g.n_blocks
     kd = jax.random.key_data(key)
+    ro = jnp.asarray(0 if row_offset is None else row_offset, jnp.uint32)
 
-    def body(wl, xl, kdl):
+    def body(wl, xl, kdl, rol):
         k = jax.random.wrap_key_data(kdl)
         i = jax.lax.axis_index("array_row")
         j = jax.lax.axis_index("array_col")
         bk = _block_key(k, i * gc + j, n_blocks)
-        yb, satb = tile_lib.analog_mvm(wl, xl, bk, cfg, transpose=transpose)
+        yb, satb = tile_lib.analog_mvm(
+            wl, xl, bk, cfg, transpose=transpose,
+            row_offset=None if row_offset is None else rol,
+            total_rows=total_rows)
         y = jax.lax.psum(yb, contract_ax)
         sat = jax.lax.psum(satb.astype(jnp.int32),
                            ("array_row", "array_col")) > 0
@@ -267,23 +282,25 @@ def grid_analog_mvm_sharded(w: Array, x: Array, key: Array, cfg: RPUConfig,
     bdims = x.ndim - 1
     in_specs = (P("array_row", "array_col"),
                 P(*([None] * bdims), contract_ax),
-                P())
+                P(), P())
     out_specs = (P(*([None] * bdims), out_ax), P(*([None] * bdims)))
     mesh = g.mesh()
     f = shard_map(body, mesh=mesh, in_specs=in_specs,
                   out_specs=out_specs, check_rep=False)
-    y, sat = _replicated(mesh, *f(*_replicated(mesh, wp, x, kd)))
+    y, sat = _replicated(mesh, *f(*_replicated(mesh, wp, x, kd, ro)))
     return y[..., :out_dim], sat
 
 
 def grid_analog_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig,
                     grid: Optional[TileGrid] = None, *,
-                    transpose: bool = False) -> Tuple[Array, Array]:
+                    transpose: bool = False, row_offset=None,
+                    total_rows: Optional[int] = None) -> Tuple[Array, Array]:
     """Raw grid read: sharded when the mesh fits on the local devices,
     otherwise the (numerically identical) serial oracle."""
     g = grid if grid is not None else TileGrid.for_tile(w.shape, cfg)
     fn = grid_analog_mvm_sharded if g.sharded() else grid_analog_mvm_reference
-    return fn(w, x, key, cfg, g, transpose=transpose)
+    return fn(w, x, key, cfg, g, transpose=transpose, row_offset=row_offset,
+              total_rows=total_rows)
 
 
 # ---------------------------------------------------------------------------
@@ -292,7 +309,8 @@ def grid_analog_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig,
 
 def grid_managed_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
                      transpose: bool = False, backward: bool = False,
-                     force_reference: bool = False) -> Tuple[Array, Array]:
+                     force_reference: bool = False, row_offset=None,
+                     total_rows: Optional[int] = None) -> Tuple[Array, Array]:
     """Managed (NM + BM) read over the tile grid.
 
     Reuses ``management.with_management`` verbatim with the grid read as
@@ -312,28 +330,33 @@ def grid_managed_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
     fn = grid_analog_mvm_reference if serial else grid_analog_mvm_sharded
 
     def raw(xx, kk):
-        return fn(w, xx, kk, cfg, g, transpose=transpose)
+        return fn(w, xx, kk, cfg, g, transpose=transpose,
+                  row_offset=row_offset, total_rows=total_rows)
 
     return management.with_management(raw, x, key, cfg, backward=backward)
 
 
 def grid_tile_forward(state: tile_lib.TileState, x: Array, key: Array,
-                      cfg: RPUConfig, *, return_sat: bool = False):
+                      cfg: RPUConfig, *, return_sat: bool = False,
+                      row_offset=None, total_rows: Optional[int] = None):
     """Forward cycle on the sharded grid (replica average in the digital
     domain, after the gathered read) — grid counterpart of
     ``tile.tile_forward``."""
     y_phys, sat = grid_managed_mvm(state.w, x, key, cfg, transpose=False,
-                                   backward=False)
+                                   backward=False, row_offset=row_offset,
+                                   total_rows=total_rows)
     y = tile_lib._replica_mean(y_phys, cfg.devices_per_weight)
     return (y, sat) if return_sat else y
 
 
 def grid_tile_backward(state: tile_lib.TileState, delta: Array, key: Array,
-                       cfg: RPUConfig, *, return_sat: bool = False):
+                       cfg: RPUConfig, *, return_sat: bool = False,
+                       row_offset=None, total_rows: Optional[int] = None):
     """Backward (transpose) cycle on the grid; ``delta`` must already carry
     the ``#_d``-replicated physical row layout (``tile.replicate_delta``)."""
     z, sat = grid_managed_mvm(state.w, delta, key, cfg, transpose=True,
-                              backward=True)
+                              backward=True, row_offset=row_offset,
+                              total_rows=total_rows)
     d = cfg.devices_per_weight
     if d > 1:
         z = z / d
@@ -363,16 +386,22 @@ def _pad_maps(maps: DeviceMaps, g: TileGrid) -> DeviceMaps:
                       bound=jnp.pad(maps.bound, pad, constant_values=1.0))
 
 
+def _block_finalize(wl, upl, dnl, bndl, cup, cdn, bk, cfg):
+    """Apply one block's accumulated coincidence counts: maps + ctoc noise
+    (per-block fold_in key) + per-device bound clip."""
+    dw = cup * upl - cdn * dnl
+    if cfg.dw_min_ctoc > 0.0:
+        var = cup * upl ** 2 + cdn * dnl ** 2
+        dw = dw + cfg.dw_min_ctoc * jnp.sqrt(var) * _ctoc_noise(
+            bk, dw.shape, cfg)
+    return jnp.clip(wl + dw.astype(cfg.dtype), -bndl, bndl)
+
+
 def _block_update(wl, upl, dnl, bndl, rows_l, cols_l, bk, cfg):
     """One sub-tile's update: local coincidence contraction + maps + ctoc
     noise + per-device bound clip.  Pure block-local math (no collectives)."""
     up, dn = update_lib.coincidence_counts(rows_l, cols_l)
-    dw = up * upl - dn * dnl
-    if cfg.dw_min_ctoc > 0.0:
-        var = up * upl ** 2 + dn * dnl ** 2
-        dw = dw + cfg.dw_min_ctoc * jnp.sqrt(var) * _ctoc_noise(
-            bk, dw.shape, cfg)
-    return jnp.clip(wl + dw.astype(cfg.dtype), -bndl, bndl)
+    return _block_finalize(wl, upl, dnl, bndl, up, dn, bk, cfg)
 
 
 def grid_pulse_update(w: Array, maps: DeviceMaps, x: Array, delta: Array,
@@ -387,6 +416,13 @@ def grid_pulse_update(w: Array, maps: DeviceMaps, x: Array, delta: Array,
     coincidence matmul, so the sharded and serial paths agree exactly
     (cycle-to-cycle noise uses the per-block fold_in keys on both).
     ``delta`` must already carry the physical (replicated) row layout.
+
+    With ``cfg.update_chunk`` each device loops the chunked contraction
+    axis locally (``_grid_update_chunked_*``): per chunk it samples the
+    chunk's streams (counter-offset, so the draws equal the materialized
+    rows') and accumulates its block's integer counts; maps/ctoc/clip land
+    once at the end — bit-identical to the one-shot grid cycle with zero
+    extra collectives.
     """
     g = TileGrid.for_tile(w.shape, cfg)
     if x.ndim == 1:
@@ -395,17 +431,172 @@ def grid_pulse_update(w: Array, maps: DeviceMaps, x: Array, delta: Array,
     cx, cd = update_lib.um_factors(x, delta, cfg, lr)
     xp = g.pad_last(x, g.cols_pad)
     dp = g.pad_last(delta, g.rows_pad)
+    wp, mp = g.pad_w(w), _pad_maps(maps, g)
+    serial = force_reference or not g.sharded()
+
+    t = int(np.prod(x.shape[:-1]))
+    if cfg.update_chunk is not None and cfg.update_chunk < t:
+        # The chunked cycle is the streamed machinery with the simplest
+        # possible chunk source: row slices of the (already col-padded)
+        # materialized vectors.  Streams sampled per chunk with the
+        # counter offset equal the materialized rows' draws exactly.
+        chunk = cfg.update_chunk
+        x2, d2, nchunks = _pad_chunk_rows(xp.reshape(t, g.cols_pad),
+                                          dp.reshape(t, g.rows_pad), chunk)
+
+        def get_padded(s, start, n):
+            return (jax.lax.dynamic_slice_in_dim(s[0], start, n),
+                    jax.lax.dynamic_slice_in_dim(s[1], start, n))
+
+        fn = (_grid_update_streamed_serial if serial
+              else _grid_update_streamed_sharded)
+        new_w = fn(wp, mp, (x2, d2), get_padded, cx, cd, k_a, k_b, k_c,
+                   cfg, g, chunk, nchunks)
+        return new_w[:g.rows_phys, :g.cols]
+
     cols_s = update_lib.sample_signed_streams(k_a, xp, cx, cfg.bl,
                                               cfg.fast_rng)
     rows_s = update_lib.sample_signed_streams(k_b, dp, cd, cfg.bl,
                                               cfg.fast_rng)
-    wp, mp = g.pad_w(w), _pad_maps(maps, g)
 
-    if force_reference or not g.sharded():
+    if serial:
         new_w = _grid_update_reference(wp, mp, rows_s, cols_s, k_c, cfg, g)
     else:
         new_w = _grid_update_sharded(wp, mp, rows_s, cols_s, k_c, cfg, g)
     return new_w[:g.rows_phys, :g.cols]
+
+
+def _pad_chunk_rows(x2, d2, chunk):
+    t = x2.shape[0]
+    nchunks = -(-t // chunk)
+    pad = nchunks * chunk - t
+    return (jnp.pad(x2, ((0, pad), (0, 0))),
+            jnp.pad(d2, ((0, pad), (0, 0))), nchunks)
+
+
+def grid_pulse_update_streamed(w: Array, maps: DeviceMaps, src, get_chunk,
+                               key: Array, cfg: RPUConfig, lr: float, *,
+                               total: int, chunk: int, um_maxima=None,
+                               force_reference: bool = False) -> Array:
+    """Grid update cycle over *generated* chunks (the streaming conv path):
+    ``get_chunk(src, start, chunk) -> (cols, delta_phys)`` materializes one
+    chunk of logical columns + replicated error rows; rows past ``total``
+    must be zeroed.  Mirrors ``grid_pulse_update``'s chunked branch with
+    the gather inside each (per-device) chunk round — bit-identical to the
+    materialized grid cycle, zero collectives in the update."""
+    from repro.core import update as update_lib2  # _um_from_maxima
+    g = TileGrid.for_tile(w.shape, cfg)
+    k_a, k_b, k_c = jax.random.split(key, 3)
+    cx, cd = update_lib2._um_from_maxima(um_maxima, cfg, lr)
+    wp, mp = g.pad_w(w), _pad_maps(maps, g)
+
+    def get_padded(s, start, n):
+        cols, delta = get_chunk(s, start, n)
+        return (g.pad_last(cols, g.cols_pad), g.pad_last(delta, g.rows_pad))
+
+    nchunks = -(-total // chunk)
+    serial = force_reference or not g.sharded()
+    fn = (_grid_update_streamed_serial if serial
+          else _grid_update_streamed_sharded)
+    new_w = fn(wp, mp, src, get_padded, cx, cd, k_a, k_b, k_c, cfg, g,
+               chunk, nchunks)
+    return new_w[:g.rows_phys, :g.cols]
+
+
+def _gen_chunk_streams(src, get_padded, cx, cd, k_a, k_b, cfg, chunk, start):
+    """Sample one generated chunk's signed streams (padded layout, counter
+    offset ``start`` rows)."""
+    cols, delta = get_padded(src, start, chunk)
+    a = update_lib.sample_signed_streams(k_a, cols, cx, cfg.bl, cfg.fast_rng,
+                                         row_offset=start)
+    b = update_lib.sample_signed_streams(k_b, delta, cd, cfg.bl,
+                                         cfg.fast_rng, row_offset=start)
+    return b, a
+
+
+def _grid_update_streamed_serial(wp, mp, src, get_padded, cx, cd, k_a, k_b,
+                                 k_c, cfg, g: TileGrid, chunk: int,
+                                 nchunks: int):
+    """Serial oracle of the chunked/streamed grid update: accumulate the
+    full padded count matrices over generated chunks, then finalize per
+    block (slicing the full counts equals each block's local contraction —
+    integer sums)."""
+    def body(c, carry):
+        up, dn = carry
+        b, a = _gen_chunk_streams(src, get_padded, cx, cd, k_a, k_b, cfg,
+                                  chunk, c * chunk)
+        u, d_ = update_lib.coincidence_counts(b, a)
+        return up + u, dn + d_
+
+    zeros = jnp.zeros((g.rows_pad, g.cols_pad), jnp.float32)
+    cup, cdn = jax.lax.fori_loop(0, nchunks, body, (zeros, zeros))
+    return _finalize_blocks(wp, mp, cup, cdn, k_c, cfg, g)
+
+
+def _finalize_blocks(wp, mp, cup, cdn, k_c, cfg, g: TileGrid):
+    """Per-block finalize of full padded count matrices (serial)."""
+    br, bc = g.block_rows, g.block_cols
+    rows_out = []
+    for i in range(g.grid_rows):
+        cols_out = []
+        for j in range(g.grid_cols):
+            blk = (slice(i * br, (i + 1) * br), slice(j * bc, (j + 1) * bc))
+            bk = _block_key(k_c, i * g.grid_cols + j, g.n_blocks)
+            cols_out.append(_block_finalize(
+                wp[blk], mp.dw_up[blk], mp.dw_dn[blk], mp.bound[blk],
+                cup[blk], cdn[blk], bk, cfg))
+        rows_out.append(jnp.concatenate(cols_out, axis=1))
+    return jnp.concatenate(rows_out, axis=0)
+
+
+def _grid_update_streamed_sharded(wp, mp, src, get_padded, cx, cd, k_a, k_b,
+                                  k_c, cfg, g: TileGrid, chunk: int,
+                                  nchunks: int):
+    """Sharded streamed grid update: per-device chunk loops — each device
+    generates every chunk from the (replicated) source volume, samples its
+    streams, contracts only its block's slices, finalizes once."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    gc, n_blocks = g.grid_cols, g.n_blocks
+    br, bc = g.block_rows, g.block_cols
+    ka_d = jax.random.key_data(k_a)
+    kb_d = jax.random.key_data(k_b)
+    kc_d = jax.random.key_data(k_c)
+    src_flat, src_tree = jax.tree_util.tree_flatten(src)
+    n_src = len(src_flat)
+
+    def body(wl, upl, dnl, bndl, cxl, cdl, kad, kbd, kcd, *src_l):
+        ka = jax.random.wrap_key_data(kad)
+        kb = jax.random.wrap_key_data(kbd)
+        kc = jax.random.wrap_key_data(kcd)
+        s = jax.tree_util.tree_unflatten(src_tree, src_l)
+        i = jax.lax.axis_index("array_row")
+        j = jax.lax.axis_index("array_col")
+
+        def chunk_body(c, carry):
+            up, dn = carry
+            b, a = _gen_chunk_streams(s, get_padded, cxl, cdl, ka, kb, cfg,
+                                      chunk, c * chunk)
+            b_loc = jax.lax.dynamic_slice_in_dim(b, i * br, br, axis=-1)
+            a_loc = jax.lax.dynamic_slice_in_dim(a, j * bc, bc, axis=-1)
+            u, d_ = update_lib.coincidence_counts(b_loc, a_loc)
+            return up + u, dn + d_
+
+        zeros = jnp.zeros((br, bc), jnp.float32)
+        cup, cdn = jax.lax.fori_loop(0, nchunks, chunk_body, (zeros, zeros))
+        bk = _block_key(kc, i * gc + j, n_blocks)
+        return _block_finalize(wl, upl, dnl, bndl, cup, cdn, bk, cfg)
+
+    blockspec = P("array_row", "array_col")
+    in_specs = ((blockspec,) * 4 + (P(),) * (5 + n_src))
+    mesh = g.mesh()
+    f = shard_map(body, mesh=mesh, in_specs=in_specs,
+                  out_specs=blockspec, check_rep=False)
+    (new_w,) = _replicated(mesh, f(*_replicated(
+        mesh, wp, mp.dw_up, mp.dw_dn, mp.bound, jnp.asarray(cx),
+        jnp.asarray(cd), ka_d, kb_d, kc_d, *src_flat)))
+    return new_w
 
 
 def _grid_update_reference(wp, mp, rows_s, cols_s, k_c, cfg, g: TileGrid):

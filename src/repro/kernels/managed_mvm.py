@@ -49,7 +49,70 @@ from repro.kernels import compat
 from repro.kernels.noisy_mvm import _mix, _normal_at
 
 
-def _kernel(seeds_ref, nm_ref, x_ref, w_ref, y_ref, sat_ref,
+# ---------------------------------------------------------------------------
+# Shared managed-read body
+#
+# These block-level helpers are the single source of the managed-read
+# semantics for every fused kernel: this kernel's segment loop AND the
+# implicit-im2col conv kernel (``kernels/conv_mvm.py``) call the same
+# functions, which is what keeps the two bit-compatible (same noise
+# counters, same clip/select/average expression order).
+# ---------------------------------------------------------------------------
+
+def replica_cols(bm: int, outp: int, out_f: int, out_f_p: int):
+    """Physical output-channel index of each replica-padded column.
+
+    Returns ``(o, valid)``: ``o`` maps padded column -> physical channel
+    (for the noise counter), ``valid`` masks the per-replica lane padding
+    out of the saturation reduction.
+    """
+    cols = jax.lax.broadcasted_iota(jnp.uint32, (bm, outp), 1)
+    rep = cols // np.uint32(out_f_p)
+    within = cols - rep * np.uint32(out_f_p)
+    o = rep * np.uint32(out_f) + within
+    valid = within < np.uint32(out_f)
+    return o, valid
+
+
+def read_segment(v, seed, e, n_total: int, valid, sigma: float,
+                 alpha: float):
+    """One physical read of a raw-product block: on-chip noise at counter
+    ``e`` + per-vector saturation + integrator clip.
+
+    Returns ``(v_read, sat)`` with ``sat`` an int32 ``(rows, 1)`` flag.
+    """
+    if sigma > 0.0:
+        v = v + np.float32(sigma) * _normal_at(_mix(seed), e, n_total)
+    if alpha != float("inf"):
+        sat = jnp.any(valid & (jnp.abs(v) >= np.float32(alpha)),
+                      axis=1, keepdims=True).astype(jnp.int32)
+        v = jnp.clip(v, -np.float32(alpha), np.float32(alpha))
+    else:
+        sat = jnp.zeros((v.shape[0], 1), jnp.int32)
+    return v, sat
+
+
+def select_and_average(acc1, acc2, sat1, sat2, s, *, two_phase: bool,
+                       retry_scale: float, d_avg: int, out_f_p: int):
+    """Two-phase select-on-saturation, digital re-scale and #_d replica
+    average — the managed read's epilogue.  Returns ``(y, residual)``."""
+    if two_phase:
+        sel = sat1 > 0                                      # (rows, 1)
+        y2 = acc2 * np.float32(retry_scale)
+        y = jnp.where(sel, y2, acc1) * s
+        residual = sat1 & sat2
+    else:
+        y = acc1 * s
+        residual = sat1
+    if d_avg > 1:
+        acc = y[:, 0:out_f_p]
+        for rblk in range(1, d_avg):
+            acc = acc + y[:, rblk * out_f_p:(rblk + 1) * out_f_p]
+        y = acc / np.float32(d_avg)
+    return y, residual
+
+
+def _kernel(seeds_ref, off_ref, nm_ref, x_ref, w_ref, y_ref, sat_ref,
             seg_ref, acc1_ref, acc2_ref, sat1_ref, sat2_ref, *,
             nk: int, steps_per_seg: int, n_seg: int, sigma: float,
             alpha: float, bm: int, outp: int, out_f: int, out_f_p: int,
@@ -86,50 +149,32 @@ def _kernel(seeds_ref, nm_ref, x_ref, w_ref, y_ref, sat_ref,
         v1 = seg_ref[...] / s                 # read 1: W (x / s)
 
         # physical column index of each padded column (replica-padded layout)
-        cols = jax.lax.broadcasted_iota(jnp.uint32, (bm, outp), 1)
-        rep = cols // np.uint32(out_f_p)
-        within = cols - rep * np.uint32(out_f_p)
-        o = rep * np.uint32(out_f) + within
-        valid = within < np.uint32(out_f)
-        rows = (i * bm
+        o, valid = replica_cols(bm, outp, out_f, out_f_p)
+        rows = (off_ref[0, 0] + i * bm
                 + jax.lax.broadcasted_iota(jnp.uint32, (bm, outp), 0))
         # flat counter e = (b * n_seg + si) * out_phys + o  (reference layout)
         e = (rows * np.uint32(n_seg) + si) * np.uint32(out_phys) + o
         n_total = (batch * n_seg * out_phys) & 0xFFFFFFFF
 
-        def read(v, seed, satacc_ref, acc_ref):
-            if sigma > 0.0:
-                v = v + np.float32(sigma) * _normal_at(_mix(seed), e, n_total)
-            if alpha != float("inf"):
-                satacc_ref[...] |= jnp.any(
-                    valid & (jnp.abs(v) >= np.float32(alpha)),
-                    axis=1, keepdims=True).astype(jnp.int32)
-                v = jnp.clip(v, -np.float32(alpha), np.float32(alpha))
-            acc_ref[...] += v
-
-        read(v1, seeds_ref[0, 0], sat1_ref, acc1_ref)
+        v_read, sat = read_segment(v1, seeds_ref[0, 0], e, n_total, valid,
+                                   sigma, alpha)
+        sat1_ref[...] |= sat
+        acc1_ref[...] += v_read
         if two_phase:
             # read 2: W (x / (retry_scale * s)) — same MXU product, rescaled
-            read(v1 / np.float32(retry_scale), seeds_ref[0, 1],
-                 sat2_ref, acc2_ref)
+            v_read, sat = read_segment(
+                v1 / np.float32(retry_scale), seeds_ref[0, 1], e, n_total,
+                valid, sigma, alpha)
+            sat2_ref[...] |= sat
+            acc2_ref[...] += v_read
         seg_ref[...] = jnp.zeros_like(seg_ref)
 
     @pl.when(k == nk - 1)
     def _finalize():
-        s = nm_ref[...]
-        if two_phase:
-            sel = sat1_ref[...] > 0                         # (bm, 1)
-            y2 = acc2_ref[...] * np.float32(retry_scale)
-            y = jnp.where(sel, y2, acc1_ref[...]) * s
-            residual = sat1_ref[...] & sat2_ref[...]
-        else:
-            y = acc1_ref[...] * s
-            residual = sat1_ref[...]
-        if d_avg > 1:
-            acc = y[:, 0:out_f_p]
-            for rblk in range(1, d_avg):
-                acc = acc + y[:, rblk * out_f_p:(rblk + 1) * out_f_p]
-            y = acc / np.float32(d_avg)
+        y, residual = select_and_average(
+            acc1_ref[...], acc2_ref[...], sat1_ref[...], sat2_ref[...],
+            nm_ref[...], two_phase=two_phase, retry_scale=retry_scale,
+            d_avg=d_avg, out_f_p=out_f_p)
         y_ref[...] = y.astype(y_ref.dtype)
         sat_ref[...] = residual
 
@@ -137,12 +182,14 @@ def _kernel(seeds_ref, nm_ref, x_ref, w_ref, y_ref, sat_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("sigma", "alpha", "n_seg", "transpose", "two_phase",
-                     "retry_scale", "d_avg", "bm", "bk", "interpret"))
+                     "retry_scale", "d_avg", "total_rows", "bm", "bk",
+                     "interpret"))
 def managed_mvm_pallas(w: jax.Array, x2d: jax.Array, nm_s: jax.Array,
                        seeds: jax.Array, *, sigma: float, alpha: float,
                        n_seg: int = 1, transpose: bool = False,
                        two_phase: bool = False, retry_scale: float = 16.0,
-                       d_avg: int = 1, bm: int = 128, bk: int = 128,
+                       d_avg: int = 1, row_offset=None,
+                       total_rows: int = None, bm: int = 128, bk: int = 128,
                        interpret: bool = False
                        ) -> Tuple[jax.Array, jax.Array]:
     """Fused managed analog read (NM scale + two-phase BM + replica average).
@@ -157,6 +204,10 @@ def managed_mvm_pallas(w: jax.Array, x2d: jax.Array, nm_s: jax.Array,
       n_seg: physical-array segments along the contraction dim.
       two_phase: run the unconditional 1/16-scale retry + select.
       d_avg: #_d replica row blocks averaged into the output (forward only).
+      row_offset/total_rows: streaming-chunk noise discipline — ``x2d`` is
+        rows ``[row_offset, row_offset + B)`` of a logical batch of
+        ``total_rows`` vectors and draws that batch's noise counters
+        (``row_offset`` may be traced; ``total_rows`` is static).
 
     Returns:
       y (B, out_f) replica-averaged managed read, and residual saturation
@@ -173,6 +224,10 @@ def managed_mvm_pallas(w: jax.Array, x2d: jax.Array, nm_s: jax.Array,
     out_f = out_phys // d_avg
     b = x2d.shape[0]
     assert x2d.shape[1] == k_dim, (x2d.shape, w.shape, transpose)
+    if total_rows is None:
+        total_rows = b
+    rowoff = (jnp.zeros((), jnp.uint32) if row_offset is None
+              else jnp.asarray(row_offset, jnp.uint32))
 
     out_f_p = -(-out_f // 128) * 128          # per-replica lane-padded width
     outp = d_avg * out_f_p
@@ -223,7 +278,7 @@ def managed_mvm_pallas(w: jax.Array, x2d: jax.Array, nm_s: jax.Array,
     kern = functools.partial(
         _kernel, nk=nk, steps_per_seg=steps_per_seg, n_seg=n_seg,
         sigma=sigma, alpha=alpha, bm=bm, outp=outp, out_f=out_f,
-        out_f_p=out_f_p, d_avg=d_avg, out_phys=out_phys, batch=b,
+        out_f_p=out_f_p, d_avg=d_avg, out_phys=out_phys, batch=total_rows,
         transpose=transpose, two_phase=two_phase, retry_scale=retry_scale)
 
     y, sat = pl.pallas_call(
@@ -231,6 +286,7 @@ def managed_mvm_pallas(w: jax.Array, x2d: jax.Array, nm_s: jax.Array,
         grid=(nb, nk),
         in_specs=[
             pl.BlockSpec((1, 2), lambda i, k: (0, 0)),      # seeds
+            pl.BlockSpec((1, 1), lambda i, k: (0, 0)),      # row offset
             pl.BlockSpec((bm, 1), lambda i, k: (i, 0)),     # nm scale
             pl.BlockSpec((bm, bk), lambda i, k: (i, k)),    # x
             w_spec,                                         # w
@@ -253,5 +309,6 @@ def managed_mvm_pallas(w: jax.Array, x2d: jax.Array, nm_s: jax.Array,
         compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(seeds.reshape(1, 2).astype(jnp.uint32), nm_pad, xpad, wpad)
+    )(seeds.reshape(1, 2).astype(jnp.uint32), rowoff.reshape(1, 1), nm_pad,
+      xpad, wpad)
     return y[:b, :out_f], sat[:b, 0] > 0

@@ -62,8 +62,8 @@ def _normal_at(seed_mixed, e, n_total):
     return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(np.float32(2.0 * np.pi) * u2)
 
 
-def _kernel(seed_ref, x_ref, w_ref, y_ref, sat_ref, seg_ref, acc_ref,
-            satacc_ref, *, nk: int, steps_per_seg: int, n_seg: int,
+def _kernel(seed_ref, off_ref, x_ref, w_ref, y_ref, sat_ref, seg_ref,
+            acc_ref, satacc_ref, *, nk: int, steps_per_seg: int, n_seg: int,
             sigma: float, alpha: float, bm: int, bn: int, out_dim: int,
             batch: int, transpose: bool):
     i = pl.program_id(0)
@@ -94,8 +94,10 @@ def _kernel(seed_ref, x_ref, w_ref, y_ref, sat_ref, seg_ref, acc_ref,
         si = k // steps_per_seg
         v = seg_ref[...]
         if sigma > 0.0:
-            # flat counter e = (b * n_seg + si) * out_dim + r  (ref layout)
-            rows = (i * bm
+            # flat counter e = (b * n_seg + si) * out_dim + r  (ref layout);
+            # off_ref carries the streaming-chunk row offset (global row of
+            # this call's first batch row — 0 for unchunked reads)
+            rows = (off_ref[0, 0] + i * bm
                     + jax.lax.broadcasted_iota(jnp.uint32, (bm, bn), 0))
             cols = (j * bn
                     + jax.lax.broadcasted_iota(jnp.uint32, (bm, bn), 1))
@@ -120,11 +122,12 @@ def _kernel(seed_ref, x_ref, w_ref, y_ref, sat_ref, seg_ref, acc_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("sigma", "alpha", "n_seg", "transpose", "bm", "bn",
-                     "bk", "interpret"))
+    static_argnames=("sigma", "alpha", "n_seg", "transpose", "total_rows",
+                     "bm", "bn", "bk", "interpret"))
 def noisy_mvm_pallas(w: jax.Array, x2d: jax.Array, seed: jax.Array, *,
                      sigma: float, alpha: float, n_seg: int = 1,
-                     transpose: bool = False, bm: int = 128, bn: int = 128,
+                     transpose: bool = False, row_offset=None,
+                     total_rows: int = None, bm: int = 128, bn: int = 128,
                      bk: int = 128, interpret: bool = False
                      ) -> Tuple[jax.Array, jax.Array]:
     """Fused noisy/bounded MVM.
@@ -134,6 +137,10 @@ def noisy_mvm_pallas(w: jax.Array, x2d: jax.Array, seed: jax.Array, *,
       x2d: (B, C) inputs (or (B, R) when ``transpose``).
       seed: uint32 scalar (from ``fastrng.key_to_seed``).
       n_seg: physical-array segments along the contraction dim.
+      row_offset/total_rows: streaming-chunk noise discipline — ``x2d`` is
+        rows ``[row_offset, row_offset + B)`` of a logical batch of
+        ``total_rows`` vectors and draws that batch's noise counters
+        (``row_offset`` may be traced; ``total_rows`` is static).
 
     Returns:
       y (B, out_dim) and saturation flags (B, n_out_blocks) int32 (any
@@ -144,6 +151,10 @@ def noisy_mvm_pallas(w: jax.Array, x2d: jax.Array, seed: jax.Array, *,
     k_dim = c if not transpose else r
     b = x2d.shape[0]
     assert x2d.shape[1] == k_dim, (x2d.shape, w.shape, transpose)
+    if total_rows is None:
+        total_rows = b
+    rowoff = (jnp.zeros((), jnp.uint32) if row_offset is None
+              else jnp.asarray(row_offset, jnp.uint32))
 
     # pad batch to bm, out to bn, each contraction segment to a bk multiple
     seg_len = -(-k_dim // n_seg)
@@ -179,14 +190,15 @@ def noisy_mvm_pallas(w: jax.Array, x2d: jax.Array, seed: jax.Array, *,
 
     kern = functools.partial(
         _kernel, nk=nk, steps_per_seg=steps_per_seg, n_seg=n_seg,
-        sigma=sigma, alpha=alpha, bm=bm, bn=bn, out_dim=out_dim, batch=b,
-        transpose=transpose)
+        sigma=sigma, alpha=alpha, bm=bm, bn=bn, out_dim=out_dim,
+        batch=total_rows, transpose=transpose)
 
     y, sat = pl.pallas_call(
         kern,
         grid=(nb, no, nk),
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),       # seed
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),       # row offset
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),     # x
             w_spec,                                             # w
         ],
@@ -206,5 +218,6 @@ def noisy_mvm_pallas(w: jax.Array, x2d: jax.Array, seed: jax.Array, *,
         compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(seed.reshape(1, 1).astype(jnp.uint32), xpad, wpad)
+    )(seed.reshape(1, 1).astype(jnp.uint32), rowoff.reshape(1, 1), xpad,
+      wpad)
     return y[:b, :out_dim], sat[:b]

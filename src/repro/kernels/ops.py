@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.core.device import DeviceMaps, RPUConfig
 from repro.kernels.managed_mvm import managed_mvm_pallas
 from repro.kernels.noisy_mvm import noisy_mvm_pallas
-from repro.kernels.pulse_update import pulse_update_pallas
+from repro.kernels.pulse_update import pulse_counts_pallas, pulse_update_pallas
 from repro.utils import fastrng
 
 Array = jax.Array
@@ -34,7 +34,8 @@ def _interpret_default() -> bool:
 
 
 def noisy_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
-              transpose: bool = False) -> Tuple[Array, Array]:
+              transpose: bool = False, row_offset=None,
+              total_rows: int = None) -> Tuple[Array, Array]:
     """Kernel-backed analog MVM with the tile API contract
     (arbitrary leading batch dims; per-vector saturation flag).
 
@@ -58,7 +59,8 @@ def noisy_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
     seed = fastrng.key_to_seed(key)
     y2d, satblk = noisy_mvm_pallas(
         w, x2d, seed, sigma=float(sigma), alpha=float(cfg.out_bound),
-        n_seg=n_seg, transpose=transpose, interpret=_interpret_default())
+        n_seg=n_seg, transpose=transpose, row_offset=row_offset,
+        total_rows=total_rows, interpret=_interpret_default())
     sat = jnp.any(satblk > 0, axis=-1)
     out_dim = c if transpose else r
     return (y2d.reshape(*batch_shape, out_dim),
@@ -66,7 +68,8 @@ def noisy_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
 
 
 def managed_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
-                transpose: bool = False, backward: bool = False
+                transpose: bool = False, backward: bool = False,
+                row_offset=None, total_rows: int = None
                 ) -> Tuple[Array, Array]:
     """Kernel-backed *managed* analog read: NM scale, fixed-latency BM
     (off / two-phase), clipping and the #_d replica average in ONE Pallas
@@ -111,9 +114,43 @@ def managed_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
         w, x2d, nm_s, seeds, sigma=float(sigma), alpha=float(cfg.out_bound),
         n_seg=n_seg, transpose=transpose, two_phase=use_bm,
         retry_scale=float(management.TWO_PHASE_SCALE), d_avg=d_avg,
+        row_offset=row_offset, total_rows=total_rows,
         interpret=_interpret_default())
     out_f = c if transpose else r // d_avg
     return (y2d.reshape(*batch_shape, out_f), sat.reshape(batch_shape))
+
+
+def conv_managed_mvm(w: Array, xpad: Array, geom, nm_s: Array, key: Array,
+                     cfg: RPUConfig) -> Tuple[Array, Array]:
+    """Kernel-backed implicit-im2col managed conv read
+    (``conv_mvm_pallas``): the patch tiles are assembled in VMEM from the
+    activation volume — no im2col gather in HBM at any chunk size.
+
+    ``nm_s``: (positions, 1) per-position digital scale (the window max the
+    caller computes without materializing columns; ones when NM is off).
+    Key/seed discipline matches :func:`managed_mvm` exactly, so the conv
+    kernel draws bit-identical noise to the gather + fused-read path.
+    """
+    from repro.core import management
+    from repro.kernels.conv_mvm import conv_managed_mvm_pallas
+
+    use_bm = cfg.bound_management and cfg.out_bound != float("inf")
+    if use_bm and cfg.bm_mode != "two_phase":
+        raise ValueError(
+            "iterative BM cannot be fused into one launch; use "
+            "management.with_bound_management over noisy_mvm")
+    sigma = cfg.read_noise if cfg.noise_forward else 0.0
+    if use_bm:
+        k1, k2 = jax.random.split(key)
+        seeds = jnp.stack([fastrng.key_to_seed(k1), fastrng.key_to_seed(k2)])
+    else:
+        s1 = fastrng.key_to_seed(key)
+        seeds = jnp.stack([s1, s1])
+    return conv_managed_mvm_pallas(
+        w, xpad, nm_s, seeds, geom=geom, sigma=float(sigma),
+        alpha=float(cfg.out_bound), two_phase=use_bm,
+        retry_scale=float(management.TWO_PHASE_SCALE),
+        d_avg=cfg.devices_per_weight, interpret=_interpret_default())
 
 
 def pulse_update_fused(w: Array, maps: DeviceMaps, streams_rows: Array,
@@ -127,3 +164,20 @@ def pulse_update_fused(w: Array, maps: DeviceMaps, streams_rows: Array,
     return pulse_update_pallas(
         w, maps.dw_up, maps.dw_dn, maps.bound, rows2, cols2, seed,
         ctoc=float(cfg.dw_min_ctoc), interpret=_interpret_default())
+
+
+def pulse_counts(streams_rows: Array, streams_cols: Array
+                 ) -> Tuple[Array, Array]:
+    """Kernel-backed coincidence-count contraction for one stream chunk —
+    the chunked-update accumulation entry (``core.update.stream_counts``).
+
+    Bit-identical to ``update.coincidence_counts`` (the counts are integer
+    sums of {0, 1} products in f32) and to the count stage of the fused
+    ``pulse_update_pallas`` launch, so chunked pallas updates accumulate
+    counts that finalize to exactly the materialized fused result.
+    """
+    m = streams_rows.shape[-1]
+    n = streams_cols.shape[-1]
+    rows2 = streams_rows.reshape(-1, m)
+    cols2 = streams_cols.reshape(-1, n)
+    return pulse_counts_pallas(rows2, cols2, interpret=_interpret_default())

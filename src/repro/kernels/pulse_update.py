@@ -79,6 +79,86 @@ def _make_kernel(nt, bm, bn, n_cols, ctoc, n_total):
     return kernel
 
 
+def _make_counts_kernel(nt):
+    def kernel(b_ref, a_ref, up_ref, dn_ref, net_ref, tot_ref):
+        t = pl.program_id(2)
+
+        @pl.when(t == 0)
+        def _init():
+            net_ref[...] = jnp.zeros_like(net_ref)
+            tot_ref[...] = jnp.zeros_like(tot_ref)
+
+        bb = b_ref[...]
+        ab = a_ref[...]
+        dims = (((0,), (0,)), ((), ()))
+        net_ref[...] += jax.lax.dot_general(
+            bb, ab, dims, preferred_element_type=jnp.float32)
+        tot_ref[...] += jax.lax.dot_general(
+            jnp.abs(bb), jnp.abs(ab), dims,
+            preferred_element_type=jnp.float32)
+
+        @pl.when(t == nt - 1)
+        def _finalize():
+            net = net_ref[...]
+            tot = tot_ref[...]
+            up_ref[...] = 0.5 * (tot + net)
+            dn_ref[...] = 0.5 * (tot - net)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bt", "interpret"))
+def pulse_counts_pallas(streams_rows: jax.Array, streams_cols: jax.Array, *,
+                        bm: int = 128, bn: int = 128, bt: int = 128,
+                        interpret: bool = False):
+    """Fused coincidence-count contraction only: the chunked-update entry.
+
+    The streaming update cycle accumulates per-chunk ``(count_up,
+    count_dn)`` — integer-valued f32, so chunk sums are exact — and applies
+    maps/ctoc/clip once at the end (``core.update.finalize_counts``); this
+    kernel is the per-chunk contraction (both stream matmuls in one launch,
+    nothing round-trips HBM but the two (M, N) count tiles).
+
+    ``streams_rows`` (T, M_phys), ``streams_cols`` (T, N) signed {0, +-1};
+    returns ``(count_up, count_dn)`` of shape (M_phys, N).
+    """
+    t, m = streams_rows.shape
+    n = streams_cols.shape[1]
+    assert streams_cols.shape[0] == t, (streams_rows.shape,
+                                        streams_cols.shape)
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    tp = -(-t // bt) * bt
+    rp = jnp.pad(streams_rows, ((0, tp - t), (0, mp - m)))
+    cp = jnp.pad(streams_cols, ((0, tp - t), (0, np_ - n)))
+
+    up, dn = pl.pallas_call(
+        _make_counts_kernel(tp // bt),
+        grid=(mp // bm, np_ // bn, tp // bt),
+        in_specs=[
+            pl.BlockSpec((bt, bm), lambda i, j, t: (t, i)),   # row streams
+            pl.BlockSpec((bt, bn), lambda i, j, t: (t, j)),   # col streams
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        compiler_params=compat.compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(rp, cp)
+    return up[:m, :n], dn[:m, :n]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("ctoc", "bm", "bn", "bt", "interpret"))

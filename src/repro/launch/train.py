@@ -65,13 +65,18 @@ def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
           lr: float = 3e-4, log_every: int = 1, seed: int = 0,
           engine: str = "scan", scan_chunk: int = 10,
           bm_mode: str = "iterative", use_pallas: bool = False,
-          tile_mesh: Optional[str] = None):
+          tile_mesh: Optional[str] = None,
+          update_chunk: Optional[int] = None):
     import dataclasses
     cfg = registry.get_config(arch, smoke=smoke)
     if analog:
         from repro.core.device import rpu_nm_bm_um_bl1
         rpu = dataclasses.replace(rpu_nm_bm_um_bl1(), bm_mode=bm_mode,
                                   use_pallas=use_pallas)
+        if update_chunk:
+            rpu = rpu.with_streaming(update_chunk=update_chunk)
+            print(f"[train] streaming update cycle: chunk={update_chunk} "
+                  "(bit-identical, constant pulse-stream memory)")
         if tile_mesh:
             try:
                 gr, gc = (int(v) for v in tile_mesh.split(","))
@@ -91,6 +96,9 @@ def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
     elif tile_mesh:
         raise ValueError("--tile-mesh requires --analog (it shards the "
                          "analog crossbar tiles, not fp weights)")
+    elif update_chunk:
+        raise ValueError("--update-chunk requires --analog (it chunks the "
+                         "pulse-stream update cycle)")
 
     mesh, rules = build_mesh_and_rules(smoke, multi_pod)
     pipeline = SyntheticTokenSource(TokenPipelineConfig(
@@ -218,13 +226,20 @@ def main():
                          "RxC sub-tile grid on the 'array_row' x 'array_col' "
                          "crossbar device mesh (serial oracle when fewer "
                          "than R*C devices; see docs/scaling.md)")
+    ap.add_argument("--update-chunk", type=int, default=None,
+                    help="with --analog: stream the update cycle's pulse "
+                         "streams in chunks of this many (sample) vector "
+                         "pairs — bit-identical to the materialized cycle, "
+                         "caps the ~BL x activation stream memory "
+                         "(docs/architecture.md, streaming pipeline)")
     args = ap.parse_args()
     res = train(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
                 smoke=args.smoke, analog=args.analog,
                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                 multi_pod=args.multi_pod, lr=args.lr, engine=args.engine,
                 scan_chunk=args.scan_chunk, bm_mode=args.bm_mode,
-                use_pallas=args.use_pallas, tile_mesh=args.tile_mesh)
+                use_pallas=args.use_pallas, tile_mesh=args.tile_mesh,
+                update_chunk=args.update_chunk)
     print(f"[train] done; final loss {res['final_loss']:.4f}")
 
 

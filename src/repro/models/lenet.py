@@ -16,7 +16,7 @@ FP-baseline with standard autodiff + SGD.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional
+from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +27,7 @@ from repro.core.tile import TileState
 
 Array = jax.Array
 LAYERS = ("K1", "K2", "W3", "W4")
+Padding = Union[str, Sequence[Tuple[int, int]]]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +35,11 @@ class LeNetConfig:
     mode: str = "analog"                     # 'analog' | 'digital'
     lr: float = 0.01                         # paper's eta
     layer_cfgs: Optional[Mapping[str, RPUConfig]] = None  # per-tile configs
+    # conv padding for K1/K2: the lax names or explicit per-dim pairs
+    # ((top, bottom), (left, right)) — e.g. ((2, 2), (2, 2)) trains the
+    # SAME-padded 28x28 -> 14x14 -> 7x7 variant; init() sizes W3 from the
+    # resulting geometry.  Default reproduces the paper (VALID).
+    conv_padding: Padding = "VALID"
 
     def cfg(self, layer: str) -> RPUConfig:
         if self.layer_cfgs is None:
@@ -51,13 +57,44 @@ class LeNetConfig:
         d[layer] = cfg
         return dataclasses.replace(self, layer_cfgs=d)
 
+    def with_stream_chunks(self, update_chunk: Optional[int] = None,
+                           conv_stream_chunk: Optional[int] = None
+                           ) -> "LeNetConfig":
+        """Enable the streaming (constant-memory) pipeline on every tile —
+        bit-identical training, bounded pulse-stream/patch live bytes."""
+        d = {l: c.with_streaming(update_chunk, conv_stream_chunk)
+             for l, c in (self.layer_cfgs or
+                          {l: RPUConfig() for l in LAYERS}).items()}
+        return dataclasses.replace(self, layer_cfgs=d)
+
+
+def _pooled_conv_shape(hw: Tuple[int, int], in_c: int, kernel: int,
+                       padding: Padding) -> Tuple[int, int]:
+    """(H, W) after one conv (stride 1) + 2x2/2 maxpool."""
+    g = conv_mapping.conv_geometry((1, hw[0], hw[1], in_c), kernel,
+                                   padding=padding)
+    if g.oh % 2 or g.ow % 2:
+        raise ValueError(
+            f"conv output {g.oh}x{g.ow} (padding {padding!r}) is not "
+            "2x2-poolable; pick a padding that yields even dims")
+    return g.oh // 2, g.ow // 2
+
+
+def feature_sizes(cfg: LeNetConfig, hw: Tuple[int, int] = (28, 28)
+                  ) -> Tuple[Tuple[int, int], Tuple[int, int], int]:
+    """Post-pool spatial dims after K1 and K2, and the W3 fan-in."""
+    p1 = _pooled_conv_shape(hw, 1, 5, cfg.conv_padding)
+    p2 = _pooled_conv_shape(p1, 16, 5, cfg.conv_padding)
+    return p1, p2, p2[0] * p2[1] * 32
+
 
 def init(key: Array, cfg: LeNetConfig) -> Dict[str, TileState]:
     k1, k2, k3, k4 = jax.random.split(key, 4)
+    _, _, flat = feature_sizes(cfg)
     return {
         "K1": conv_mapping.init(k1, 1, 16, 5, cfg.cfg("K1")),
         "K2": conv_mapping.init(k2, 16, 32, 5, cfg.cfg("K2")),
-        "W3": analog_linear.init(k3, 512, 128, cfg.cfg("W3")),
+        "W3": analog_linear.init(k3, flat, 128, cfg.cfg("W3")),
         "W4": analog_linear.init(k4, 128, 10, cfg.cfg("W4")),
     }
 
@@ -87,12 +124,12 @@ def apply(params: Dict[str, TileState], images: Array, key: Optional[Array],
     mode = cfg.mode
 
     h = conv_mapping.apply(params["K1"], images, ks[0], cfg.cfg("K1"), lr,
-                           kernel=5, mode=mode)
+                           kernel=5, padding=cfg.conv_padding, mode=mode)
     h = _maxpool2(jnp.tanh(h))                       # (B, 12, 12, 16)
     h = conv_mapping.apply(params["K2"], h, ks[1], cfg.cfg("K2"), lr,
-                           kernel=5, mode=mode)
+                           kernel=5, padding=cfg.conv_padding, mode=mode)
     h = _maxpool2(jnp.tanh(h))                       # (B, 4, 4, 32)
-    h = h.reshape(h.shape[0], -1)                    # (B, 512)
+    h = h.reshape(h.shape[0], -1)                    # (B, 512 for VALID)
     h = jnp.tanh(analog_linear.apply(params["W3"], h, ks[2], cfg.cfg("W3"),
                                      lr, mode=mode))
     logits = analog_linear.apply(params["W4"], h, ks[3], cfg.cfg("W4"), lr,

@@ -12,6 +12,12 @@ Two interchangeable engines drive the epochs:
 * ``engine="python"`` — the legacy per-step Python loop, kept as the
   correctness oracle; both engines use the identical fold_in key schedule
   and produce the same parameters (pinned by tests/test_train_engine.py).
+
+Memory: pass a ``LeNetConfig.with_stream_chunks(update_chunk,
+conv_stream_chunk)`` config to stream the conv position columns and the
+update cycle's pulse streams in constant memory — bit-identical training
+(see ``benchmarks/bm_train_engine.py --conv-stream`` for the live-bytes
+sweep).
 """
 
 from __future__ import annotations

@@ -24,6 +24,16 @@ loop with a single jitted **epoch** program:
 The legacy loop is kept in :mod:`repro.train.cnn` behind ``engine="python"``
 as a correctness oracle; the parity test in ``tests/test_train_engine.py``
 pins the two engines to identical parameters.
+
+The streaming conv/update pipeline (``RPUConfig.update_chunk`` /
+``conv_stream_chunk``, see ``core/conv_mapping.py``) composes with both
+engines transparently: the chunk loops are ``fori_loop``s inside the layer
+cycles, so the scanned epoch program holds only one chunk of im2col
+columns / pulse streams live per conv layer at any point — the epoch's
+peak live bytes stop scaling with ``BL x positions``.  Chunked training is
+bit-identical to the materialized configuration, so the engine parity
+suites hold unchanged under streaming (tests/test_conv_stream.py pins the
+cross product).
 """
 
 from __future__ import annotations

@@ -71,29 +71,54 @@ def _shaped_counter(shape: Sequence[int]) -> Array:
     return e
 
 
-def bits(key: Array, shape: Sequence[int]) -> Array:
-    """uint32 random bits of the given shape."""
+def _offset_counter(shape: Sequence[int], offset) -> Array:
+    """Shaped row-major counter shifted by ``offset`` flat elements.
+
+    ``offset`` may be a traced scalar (chunk loops derive it from the loop
+    index).  With ``offset = r0 * prod(shape[1:])`` the counters equal the
+    ``[r0:r0+shape[0]]`` row slice of the full-array counter — the exact
+    bit-parity contract the streaming conv/update chunking relies on.
+    """
+    e = _shaped_counter(shape)
+    if offset is None:
+        return e
+    return e + jnp.asarray(offset, jnp.uint32)
+
+
+def bits(key: Array, shape: Sequence[int], offset=None) -> Array:
+    """uint32 random bits of the given shape (counter shifted by ``offset``)."""
     seed = key_to_seed(key)
-    return _mix(_shaped_counter(shape) ^ _mix(seed))
+    return _mix(_offset_counter(shape, offset) ^ _mix(seed))
 
 
 def uniform(key: Array, shape: Sequence[int],
-            dtype=jnp.float32) -> Array:
-    """U[0, 1) with 24-bit mantissa resolution."""
-    b = bits(key, shape)
+            dtype=jnp.float32, *, offset=None) -> Array:
+    """U[0, 1) with 24-bit mantissa resolution.
+
+    ``offset`` shifts the flat counter so a chunked draw reproduces the
+    corresponding row slice of the full-shape draw bit-for-bit.
+    """
+    b = bits(key, shape, offset)
     return ((b >> 8).astype(jnp.float32) * (1.0 / (1 << 24))).astype(dtype)
 
 
-def normal(key: Array, shape: Sequence[int], dtype=jnp.float32) -> Array:
+def normal(key: Array, shape: Sequence[int], dtype=jnp.float32, *,
+           offset=None, total: int = None) -> Array:
     """Standard normal via Box-Muller over two counter streams.
 
     Counter layout matches the Pallas kernels' on-chip ``_normal_at``:
     u1 at flat index e, u2 at n_total + e — computed on shaped counters
     (no flat-iota slicing; see ``_shaped_counter``).
+
+    ``offset``/``total`` support chunked draws: with ``offset = r0 *
+    prod(shape[1:])`` and ``total`` the element count of the *full* array,
+    the result equals rows ``[r0:r0+shape[0]]`` of the full draw exactly
+    (u2's counter stride is the full ``total``, not the chunk size).
     """
-    n = int(np.prod(shape)) if len(shape) else 1
+    n = total if total is not None else (
+        int(np.prod(shape)) if len(shape) else 1)
     seed_m = _mix(key_to_seed(key))
-    e = _shaped_counter(shape)
+    e = _offset_counter(shape, offset)
     b1 = _mix(e ^ seed_m)
     b2 = _mix((e + np.uint32(n & 0xFFFFFFFF)) ^ seed_m)
     u1 = jnp.maximum((b1 >> 8).astype(jnp.float32) * (1.0 / (1 << 24)),

@@ -75,6 +75,38 @@ def test_dilated_conv():
                                rtol=2e-4, atol=2e-4)
 
 
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 2), h=st.integers(6, 12), w=st.integers(6, 12),
+    cin=st.integers(1, 3), kh=st.integers(1, 3), kw=st.integers(1, 4),
+    sh=st.integers(1, 2), sw=st.integers(1, 3),
+    dh=st.integers(1, 2), dw=st.integers(1, 2),
+    pt=st.integers(0, 2), pb=st.integers(0, 2),
+    pl=st.integers(0, 3), pr=st.integers(0, 2),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_im2col_slice_path_matches_patches_oracle(
+        b, h, w, cin, kh, kw, sh, sw, dh, dw, pt, pb, pl, pr, seed):
+    """Property: the hot-path slice im2col equals the dilated-patches
+    oracle across dilation>1 x explicit per-dim padding x non-square
+    kernels and strides (the generalisations the paper names)."""
+    ekh, ekw = (kh - 1) * dh + 1, (kw - 1) * dw + 1
+    if h + pt + pb < ekh or w + pl + pr < ekw:
+        return
+    x = jax.random.normal(jax.random.key(seed), (b, h, w, cin))
+    pads = ((pt, pb), (pl, pr))
+    got = cm.im2col(x, (kh, kw), (sh, sw), pads, (dh, dw))
+    want = cm.im2col_patches(x, (kh, kw), (sh, sw), pads, (dh, dw))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and the streamed gather agrees with both (bias column dropped)
+    geom = cm.conv_geometry(x.shape, (kh, kw), (sh, sw), pads, (dh, dw),
+                            bias=False)
+    xpad = cm._pad_volume(x, geom)
+    cols = cm.gather_columns(xpad, geom, 0, geom.positions)
+    np.testing.assert_array_equal(
+        np.asarray(cols), np.asarray(want.reshape(-1, geom.features)))
+
+
 def test_paper_matrix_shapes():
     """K (M x k^2 d) per the paper; K1: 16 x 26 incl. bias."""
     assert cm.conv_to_matrix_shapes(16, 5, 1) == (16, 26)
