@@ -5,7 +5,9 @@ Demonstrates the paper's core objects directly:
   2. what goes wrong without management (noise drowns small signals,
      bounds clip large ones),
   3. noise management (Eq. 3) and bound management (Eq. 4) fixing it,
-  4. a stochastic pulse-update cycle (Eq. 1) moving the weights.
+  4. a stochastic pulse-update cycle (Eq. 1) moving the weights,
+  5. the unified analog API: per-layer policies + ``convert_to_analog``
+     turning any digital network's dense layers into analog tiles.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,6 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analog import (AnalogState, convert_to_analog, conversion_plan,
+                          parse_policy, to_digital)
 from repro.core import (RPUConfig, analog_mvm_reference, init_tile,
                         tile_backward, tile_forward, tile_update)
 from repro.core import management
@@ -66,8 +70,32 @@ def main():
     print(f"\npulse update: E[dW]=lr*d^T x; measured corr = "
           f"{float(jnp.corrcoef(dw.ravel(), expect.ravel())[0, 1]):.2f} "
           f"(stochastic, BL={cfg.bl})")
+
+    # --- 4) per-layer policies: any digital net -> analog tiles -------------
+    # Ordered pattern rules, first match wins; unmatched layers stay
+    # digital.  This is the paper's selective-layer technique (13-device
+    # mapping on K2 only, Fig. 4) generalised to every architecture.
+    k = jax.random.key(7)
+    mlp = {"hidden": {"w": 0.1 * jax.random.normal(k, (16, 32))},
+           "head": {"w": 0.1 * jax.random.normal(k, (32, 10))}}
+    axes = {"hidden": {"w": ("embed", "mlp")}, "head": {"w": ("mlp", "vocab")}}
+    policy = parse_policy("hidden=managed,head=digital")
+    aparams, _ = convert_to_analog(mlp, axes, policy, key=k,
+                                   normalize=RPUConfig.normalized_for_lm)
+    print("\nper-layer policy ('hidden=managed,head=digital'):")
+    for path, label, _cfg in conversion_plan(aparams):
+        kind = (type(aparams.get(path, None)).__name__
+                if not isinstance(aparams.get(path), dict) else "dict (fp)")
+        print(f"  {path:<8} -> {label:<8} ({kind})")
+    assert isinstance(aparams["hidden"], AnalogState)
+    back = to_digital(aparams)   # effective weights, bit-exact round trip
+    assert bool(jnp.all(back["hidden"]["w"] == mlp["hidden"]["w"]))
+    print("convert_to_analog -> to_digital round trip: bit-exact")
+
     print("\nSee examples/train_lenet_analog.py for the full paper "
-          "reproduction and examples/serve_lm.py for LM serving.")
+          "reproduction (policy-driven per-layer configs), "
+          "`python -m repro.launch.train --analog-policy ...` for LM "
+          "training, and examples/serve_lm.py for LM serving.")
 
 
 if __name__ == "__main__":

@@ -1,41 +1,55 @@
 """End-to-end paper reproduction driver: train the paper's CNN on analog
 RPU arrays with all management techniques, next to the FP baseline.
 
+Per-layer device configs are expressed through the unified analog API
+(``repro.analog``): one ordered rule list gives K2 the paper's 13-device
+mapping while every other tile runs the managed (NM+BM+UM, BL=1) model —
+the Fig. 6 recipe as a policy spec::
+
+    K2=k2_multi_device,*=managed
+
 Default: compressed protocol (a few minutes on CPU).  ``--paper`` uses the
-full 30-epoch protocol (needs real MNIST under data/mnist and hours).
+full 30-epoch protocol (needs real MNIST under data/mnist and hours);
+``--smoke`` is the CI-sized API-surface check.
 
 Run:  PYTHONPATH=src python examples/train_lenet_analog.py [--quick]
 """
 
 import argparse
 
-from repro.core import device as dev
+from repro.analog import parse_policy
 from repro.models.lenet import LeNetConfig
 from repro.train import cnn
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 epoch / 256 images (CI API-surface check)")
     ap.add_argument("--quick", action="store_true",
                     help="2 epochs / 2k images (sanity-scale)")
     ap.add_argument("--paper", action="store_true",
                     help="full 30-epoch 60k-image protocol")
+    ap.add_argument("--policy", type=str,
+                    default="K2=k2_multi_device,*=managed",
+                    help="per-layer analog policy rules over K1/K2/W3/W4 "
+                         "(see repro.analog.presets)")
     args = ap.parse_args()
     if args.paper:
         proto = dict(epochs=30, batch=1, n_train=60000, n_test=10000)
     elif args.quick:
         proto = dict(epochs=2, batch=8, n_train=2048, n_test=1024)
+    elif args.smoke:
+        proto = dict(epochs=1, batch=8, n_train=256, n_test=128)
     else:
         proto = dict(epochs=8, batch=8, n_train=4096, n_test=2048)
 
+    policy = parse_policy(args.policy)
     print("=== FP baseline (digital) ===")
-    fp = cnn.train(LeNetConfig.uniform(dev.rpu_baseline(), mode="digital"),
-                   **proto)
+    fp = cnn.train(LeNetConfig.from_policy(policy, mode="digital"), **proto)
 
-    print("\n=== full RPU model: NM + BM + UM(BL=1) + 13-device K2 ===")
-    full_cfg = LeNetConfig.uniform(dev.rpu_nm_bm_um_bl1()).replace_layer(
-        "K2", dev.rpu_full(13))
-    rpu = cnn.train(full_cfg, **proto)
+    print(f"\n=== RPU model, per-layer policy: {args.policy} ===")
+    rpu = cnn.train(LeNetConfig.from_policy(policy), **proto)
 
     print(f"\nFP baseline final error : {100 * fp['final_error']:.2f}%")
     print(f"full RPU model error    : {100 * rpu['final_error']:.2f}%")

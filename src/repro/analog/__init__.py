@@ -1,0 +1,25 @@
+"""Unified analog-module API: per-layer RPU policies, presets, conversion.
+
+The single entry point for putting any model's weights on analog crossbar
+tiles (docs/architecture.md, "Analog API"):
+
+* :mod:`repro.analog.modules`  — ``AnalogState`` (the one analog parameter
+  pytree), ``AnalogLinear`` / ``AnalogConv2d`` layer wrappers;
+* :mod:`repro.analog.policy`   — ``AnalogPolicy``: ordered
+  pattern -> ``RPUConfig`` rules, first-match-wins over layer paths;
+* :mod:`repro.analog.presets`  — named device presets (``rpu_baseline``,
+  ``managed``, ``k2_multi_device``, …) and textual policy specs for CLIs;
+* :mod:`repro.analog.convert`  — ``convert_to_analog`` / ``to_digital``
+  for any pure-pytree network, plus ``conversion_plan`` tables.
+"""
+
+from repro.analog.modules import (  # noqa: F401
+    AnalogConv2d, AnalogLinear, AnalogMeta, AnalogState, ConvSpec,
+    is_analog, state_axes)
+from repro.analog.policy import (  # noqa: F401
+    DIGITAL, AnalogPolicy, AnalogRule)
+from repro.analog.presets import (  # noqa: F401
+    describe_cfg, get_preset, parse_policy, preset_names, register_preset,
+    resolve_spec)
+from repro.analog.convert import (  # noqa: F401
+    conversion_plan, convert_to_analog, to_digital)

@@ -1,0 +1,181 @@
+"""``convert_to_analog``: swap a digital model's dense leaves onto RPU tiles.
+
+Walks any pure-pytree parameter tree (nested dicts, as produced by every
+model ``init`` in this repo), finds *dense sites* — ``{"w": ...}`` /
+``{"w": ..., "b": ...}`` sub-dicts — and replaces the ones matched by an
+:class:`~repro.analog.policy.AnalogPolicy` with
+:class:`~repro.analog.modules.AnalogState` tiles.  The model's ``init`` and
+``apply`` code never changes: ``models.layers.dense_apply`` dispatches on
+the parameter type, so the MLP, transformer, MoE and SSM stacks gain
+per-layer analog projections purely through their parameters.
+
+Paths are slash-joined dict keys (``"layers/attn/q"``); stacked
+(scan-over-layers) sites — 3-D weights with a leading ``layers`` axis —
+convert via ``vmap``, one tile population per depth index.  Device seeds
+derive deterministically from the conversion key and the site path, so the
+same (params, policy, key) always produces the same analog network.
+
+``to_digital`` is the inverse for eval/export: every ``AnalogState``
+collapses back to its *effective* (replica-averaged) digital weights.
+With seeded device maps the round trip is bit-exact.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.device import RPUConfig
+from repro.analog.modules import AnalogLinear, AnalogState, state_axes
+from repro.analog.policy import AnalogPolicy
+
+Params = Any
+
+
+def _is_dense_site(node: Any) -> bool:
+    """A dict that *is* one dense layer: ``{"w"[, "b"]}`` with a 2-D weight
+    (or 3-D: stacked over a leading scan-over-layers axis)."""
+    if not isinstance(node, dict) or "w" not in node:
+        return False
+    if not set(node) <= {"w", "b"}:
+        return False
+    return getattr(node["w"], "ndim", None) in (2, 3)
+
+
+def _site_key(key: jax.Array, path: str) -> jax.Array:
+    return jax.random.fold_in(key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
+
+
+def _convert_site(node: Dict[str, Any], axes_node: Any, cfg: RPUConfig,
+                  key: jax.Array, label: str
+                  ) -> Tuple[AnalogState, Any]:
+    w, b = node["w"], node.get("b")
+    stacked = w.ndim == 3
+    if stacked:
+        n = w.shape[0]
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+        if b is None:
+            st = jax.vmap(lambda k, wi: AnalogLinear.from_digital(
+                k, wi, cfg, label=label))(keys, w)
+        else:
+            st = jax.vmap(lambda k, wi, bi: AnalogLinear.from_digital(
+                k, wi, cfg, b=bi, label=label))(keys, w, b)
+    else:
+        st = AnalogLinear.from_digital(key, w, cfg, b=b, label=label)
+
+    new_axes = None
+    if axes_node is not None:
+        waxes = axes_node["w"] if isinstance(axes_node, dict) else None
+        if waxes is not None:
+            lead = tuple(waxes[:1]) if stacked else ()
+            core = tuple(waxes[1:]) if stacked else tuple(waxes)
+            # physical tile layout is (out, in): transpose the logical axes
+            new_axes = state_axes(st, lead + (core[1], core[0]))
+    return st, new_axes
+
+
+def convert_to_analog(params: Params, axes: Optional[Params],
+                      policy: AnalogPolicy, *,
+                      key: Optional[jax.Array] = None,
+                      normalize: Optional[Callable[[RPUConfig], RPUConfig]]
+                      = None) -> Tuple[Params, Optional[Params]]:
+    """Swap policy-matched dense sites to analog tiles.
+
+    ``axes`` is the matching logical-axes tree (may be ``None``: axes are
+    then not tracked).  ``normalize`` optionally post-processes every
+    resolved config — the LM path passes
+    ``RPUConfig.normalized_for_lm`` so tiles simulate in f32 with seeded
+    maps regardless of the preset's storage strategy.
+
+    Returns ``(params, axes)`` with matched sites replaced by
+    :class:`AnalogState` (and axes mirrored); unmatched sites — and sites
+    matched by an explicit ``digital`` rule — are returned untouched.
+    """
+    key = jax.random.key(0) if key is None else key
+
+    def walk(p, a, path: Tuple[str, ...]):
+        if isinstance(p, AnalogState) or not isinstance(p, dict):
+            return p, a
+        if _is_dense_site(p):
+            path_str = "/".join(path)
+            rule = policy.match(path_str)
+            if rule is None or rule.cfg is None:
+                return p, a
+            cfg = normalize(rule.cfg) if normalize else rule.cfg
+            st, new_axes = _convert_site(p, a, cfg, _site_key(key, path_str),
+                                         rule.label)
+            return st, (new_axes if new_axes is not None else a)
+        new_p, new_a = {}, ({} if isinstance(a, dict) else a)
+        changed = False
+        for k, v in p.items():
+            sub_a = a.get(k) if isinstance(a, dict) else None
+            np_, na_ = walk(v, sub_a, path + (k,))
+            changed = changed or (np_ is not v)
+            new_p[k] = np_
+            if isinstance(new_a, dict):
+                new_a[k] = na_
+        if not changed:          # untouched subtrees pass through as-is
+            return p, a
+        return new_p, new_a
+
+    new_params, new_axes = walk(params, axes, ())
+    return new_params, (new_axes if axes is not None else None)
+
+
+def to_digital(params: Params) -> Params:
+    """Inverse conversion: every :class:`AnalogState` collapses to its
+    effective digital dense dict (``{"w"[, "b"]}``) for FP eval/export.
+
+    Stacked (3-D) tiles collapse per depth index.  Bit-exact for seeded
+    maps (no programming clip was applied at conversion time)."""
+    def conv(node):
+        if not isinstance(node, AnalogState):
+            return node
+        if node.meta.kind != "linear":
+            from repro.analog.modules import AnalogConv2d
+            fn = AnalogConv2d.to_digital
+        else:
+            fn = AnalogLinear.to_digital
+        if node.w.ndim == 3:
+            return jax.vmap(lambda st: fn(st))(node)
+        return fn(node)
+
+    return jax.tree_util.tree_map(
+        conv, params, is_leaf=lambda x: isinstance(x, AnalogState))
+
+
+def conversion_plan(params: Params,
+                    policy: Optional[AnalogPolicy] = None
+                    ) -> List[Tuple[str, str, Optional[RPUConfig]]]:
+    """Rows ``(path, rule label, cfg-or-None)`` for every dense site.
+
+    Reads converted trees directly (``AnalogState`` carries its label and
+    config); for still-digital sites the optional ``policy`` supplies the
+    would-be resolution, else they report as digital.  Feeds the
+    ``launch/train.py --analog`` startup table and the policy tests.
+    """
+    rows: List[Tuple[str, str, Optional[RPUConfig]]] = []
+
+    def walk(p, path: Tuple[str, ...]):
+        if isinstance(p, AnalogState):
+            rows.append(("/".join(path), p.meta.label or "analog",
+                         p.meta.cfg))
+            return
+        if not isinstance(p, dict):
+            return
+        if _is_dense_site(p):
+            path_str = "/".join(path)
+            cfg = policy.resolve(path_str) if policy is not None else None
+            label = (policy.label_for(path_str) if policy is not None
+                     else "digital")
+            rows.append((path_str, label if cfg is not None else "digital",
+                         cfg))
+            return
+        for k, v in p.items():
+            walk(v, path + (k,))
+
+    walk(params, ())
+    return rows

@@ -1,0 +1,296 @@
+"""First-class analog layer modules: ``AnalogState`` + thin wrappers.
+
+This is the *single* analog parameter representation every model path uses
+(the LeNet tiles, the LM dense projections, anything produced by
+``repro.analog.convert.convert_to_analog``):
+
+* :class:`AnalogState` — a registered pytree node holding the physical tile
+  arrays (``w``, optional materialized ``maps``, the device-population
+  ``seed``) next to **static** metadata (:class:`AnalogMeta`: the layer's
+  :class:`~repro.core.device.RPUConfig`, bias flag, linear/conv kind, conv
+  geometry, display label).  It replaces the old ad-hoc ``{"w": …,
+  "seed": …}`` dicts and the ``"seed" in p`` sniffing in
+  ``models/layers.py`` — dispatch is ``isinstance(p, AnalogState)`` and the
+  device config travels with the parameters instead of being threaded
+  through every call site.
+* :class:`AnalogLinear` / :class:`AnalogConv2d` — wrappers around
+  :mod:`repro.core.analog_linear` / :mod:`repro.core.conv_mapping` that
+  init/apply an :class:`AnalogState` (bit-identical numerics to calling the
+  core layers directly with the same keys), plus ``from_digital`` /
+  ``to_digital`` converters used by :mod:`repro.analog.convert`.
+
+Because the metadata is pytree *aux data*, jit/scan/vmap/shard_map treat it
+as static structure: two states with different configs are different
+treedefs, and gradients / optimizer states / sharding trees built by
+``tree_map`` reconstruct the node with the metadata intact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import analog_linear as core_linear
+from repro.core import conv_mapping as core_conv
+from repro.core import tile as tile_lib
+from repro.core.device import DeviceMaps, RPUConfig
+from repro.core.tile import TileState
+
+Array = jax.Array
+IntPair = Union[int, Tuple[int, int]]
+
+
+def _pair(v: IntPair) -> Tuple[int, int]:
+    return (v, v) if isinstance(v, int) else (int(v[0]), int(v[1]))
+
+
+def _freeze_padding(padding) -> Union[str, Tuple[Tuple[int, int], ...]]:
+    """Padding as a hashable value (str, or nested int tuples)."""
+    if isinstance(padding, str):
+        return padding
+    return tuple((int(a), int(b)) for a, b in padding)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Static conv geometry carried by a conv :class:`AnalogState`."""
+    kernel: Tuple[int, int]
+    stride: Tuple[int, int] = (1, 1)
+    padding: Union[str, Tuple[Tuple[int, int], ...]] = "VALID"
+    dilation: Tuple[int, int] = (1, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogMeta:
+    """Static (hashable) metadata of one analog layer."""
+    cfg: RPUConfig
+    bias: bool = True
+    kind: str = "linear"              # 'linear' | 'conv'
+    conv: Optional[ConvSpec] = None
+    label: str = ""                   # preset/rule name (display only)
+
+
+@jax.tree_util.register_pytree_node_class
+class AnalogState:
+    """Pytree node: physical tile arrays + static layer metadata.
+
+    Children are ``(w, seed)`` — or ``(w, maps, seed)`` when the device
+    maps are materialized — so trees with seeded maps carry no empty
+    placeholder leaf (axes/sharding/optimizer trees built by ``tree_map``
+    stay structurally aligned with the params).
+    """
+
+    __slots__ = ("w", "maps", "seed", "meta")
+
+    def __init__(self, w: Array, maps: Optional[DeviceMaps], seed: Array,
+                 meta: AnalogMeta):
+        self.w = w
+        self.maps = maps
+        self.seed = seed
+        self.meta = meta
+
+    def tree_flatten(self):
+        if self.maps is None:
+            return (self.w, self.seed), (self.meta, False)
+        return (self.w, self.maps, self.seed), (self.meta, True)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        meta, has_maps = aux
+        if has_maps:
+            w, maps, seed = children
+        else:
+            (w, seed), maps = children, None
+        return cls(w, maps, seed, meta)
+
+    # --- convenience ---------------------------------------------------------
+    @property
+    def cfg(self) -> RPUConfig:
+        return self.meta.cfg
+
+    @property
+    def bias(self) -> bool:
+        return self.meta.bias
+
+    def tile(self) -> TileState:
+        """View as the core :class:`TileState` (shares the arrays)."""
+        return TileState(w=self.w, maps=self.maps, seed=self.seed)
+
+    def with_cfg(self, cfg: RPUConfig) -> "AnalogState":
+        return AnalogState(self.w, self.maps, self.seed,
+                           dataclasses.replace(self.meta, cfg=cfg))
+
+    def __getitem__(self, name: str):
+        # dict-style access shim for pre-AnalogState code ({"w","seed"} era)
+        if name in ("w", "maps", "seed"):
+            return getattr(self, name)
+        raise KeyError(name)
+
+    def __contains__(self, name: str) -> bool:
+        return name in ("w", "maps", "seed")
+
+    def __repr__(self):
+        shape = getattr(self.w, "shape", None)
+        return (f"AnalogState(w{shape}, kind={self.meta.kind!r}, "
+                f"bias={self.meta.bias}, label={self.meta.label!r})")
+
+
+def is_analog(node: Any) -> bool:
+    return isinstance(node, AnalogState)
+
+
+def state_axes(state: AnalogState, w_axes: Tuple[Optional[str], ...]
+               ) -> AnalogState:
+    """Logical-axes tree mirroring ``state`` (for ``sharding.tree_shardings``).
+
+    ``w_axes`` annotates the *physical* weight layout (out, in[+bias]) —
+    callers pass the transposed logical axes, plus a leading ``"layers"``
+    for stacked states.
+    """
+    maps_axes = DeviceMaps(None, None, None) if state.maps is not None \
+        else None
+    return AnalogState(w_axes, maps_axes, None, state.meta)
+
+
+# ---------------------------------------------------------------------------
+# AnalogLinear
+# ---------------------------------------------------------------------------
+
+class AnalogLinear:
+    """Analog fully-connected layer over one crossbar tile.
+
+    Thin stateless wrapper: ``init`` draws the identical tile as
+    ``core.analog_linear.init`` with the same key; ``apply`` runs the
+    three-cycle custom-VJP layer with the config embedded in the state
+    (overridable per call for e.g. streaming-chunk retrofits).
+    """
+
+    kind = "linear"
+
+    @staticmethod
+    def init(key: Array, in_features: int, out_features: int,
+             cfg: RPUConfig, *, bias: bool = True,
+             init_scale: Optional[float] = None,
+             w_init: Optional[Array] = None, label: str = "") -> AnalogState:
+        ts = core_linear.init(key, in_features, out_features, cfg,
+                              bias=bias, init_scale=init_scale,
+                              w_init=w_init)
+        meta = AnalogMeta(cfg=cfg, bias=bias, kind="linear", label=label)
+        return AnalogState(ts.w, ts.maps, ts.seed, meta)
+
+    @staticmethod
+    def apply(state: AnalogState, x: Array, key: Optional[Array] = None, *,
+              lr: Any = 1.0, mode: str = "analog",
+              cfg: Optional[RPUConfig] = None) -> Array:
+        cfg = state.meta.cfg if cfg is None else cfg
+        if mode != "digital" and key is None:
+            raise ValueError(
+                "analog reads draw physical noise: pass a PRNG key (or use "
+                "repro.analog.convert.to_digital for key-free FP eval)")
+        if key is None:
+            key = jax.random.key(0)   # digital path never consumes it
+        return core_linear.apply(state.tile(), x, key, cfg, lr,
+                                 bias=state.meta.bias, mode=mode)
+
+    @staticmethod
+    def from_digital(key: Array, w: Array, cfg: RPUConfig, *,
+                     b: Optional[Array] = None, label: str = ""
+                     ) -> AnalogState:
+        """Program a digital dense weight onto a tile.
+
+        ``w``: (d_in, d_out) digital layout; ``b``: optional (d_out,) bias
+        mapped onto the paper's always-on extra input column.  With seeded
+        maps the programming is exact (``to_digital`` round-trips the
+        effective weights bit-for-bit); with materialized maps the initial
+        programming is clipped to each device's own conductance bound,
+        exactly like ``tile.init_tile``.
+        """
+        w_phys = w.astype(cfg.dtype).T                       # (out, in)
+        bias = b is not None
+        if bias:
+            w_phys = jnp.concatenate(
+                [w_phys, b.astype(cfg.dtype)[:, None]], axis=1)
+        ts = tile_lib.init_tile(key, w_phys.shape[0], w_phys.shape[1], cfg,
+                                w_init=w_phys)
+        meta = AnalogMeta(cfg=cfg, bias=bias, kind="linear", label=label)
+        return AnalogState(ts.w, ts.maps, ts.seed, meta)
+
+    @staticmethod
+    def to_digital(state: AnalogState,
+                   cfg: Optional[RPUConfig] = None) -> Dict[str, Array]:
+        """Effective (replica-averaged) weights back in digital layout."""
+        cfg = state.meta.cfg if cfg is None else cfg
+        w_eff = tile_lib.effective_weights(state.tile(), cfg)
+        if state.meta.bias:
+            return {"w": w_eff[:, :-1].T, "b": w_eff[:, -1]}
+        return {"w": w_eff.T}
+
+
+# ---------------------------------------------------------------------------
+# AnalogConv2d
+# ---------------------------------------------------------------------------
+
+class AnalogConv2d:
+    """Analog 2-D convolution: the paper's conv -> crossbar mapping, with
+    the kernel/stride/padding/dilation geometry frozen into the state."""
+
+    kind = "conv"
+
+    @staticmethod
+    def init(key: Array, in_channels: int, out_channels: int,
+             kernel: IntPair, cfg: RPUConfig, *, stride: IntPair = 1,
+             padding="VALID", dilation: IntPair = 1, bias: bool = True,
+             init_scale: Optional[float] = None,
+             label: str = "") -> AnalogState:
+        ts = core_conv.init(key, in_channels, out_channels, kernel, cfg,
+                            bias=bias, init_scale=init_scale)
+        spec = ConvSpec(kernel=_pair(kernel), stride=_pair(stride),
+                        padding=_freeze_padding(padding),
+                        dilation=_pair(dilation))
+        meta = AnalogMeta(cfg=cfg, bias=bias, kind="conv", conv=spec,
+                          label=label)
+        return AnalogState(ts.w, ts.maps, ts.seed, meta)
+
+    @staticmethod
+    def apply(state: AnalogState, x: Array, key: Optional[Array] = None, *,
+              lr: Any = 1.0, mode: str = "analog",
+              cfg: Optional[RPUConfig] = None, padding=None) -> Array:
+        spec = state.meta.conv
+        cfg = state.meta.cfg if cfg is None else cfg
+        padding = spec.padding if padding is None else padding
+        if mode != "digital" and key is None:
+            raise ValueError(
+                "analog reads draw physical noise: pass a PRNG key (or use "
+                "repro.analog.convert.to_digital for key-free FP eval)")
+        if key is None:
+            key = jax.random.key(0)   # digital path never consumes it
+        return core_conv.apply(state.tile(), x, key, cfg, lr,
+                               kernel=spec.kernel, stride=spec.stride,
+                               padding=padding, dilation=spec.dilation,
+                               bias=state.meta.bias, mode=mode)
+
+    @staticmethod
+    def to_digital(state: AnalogState,
+                   cfg: Optional[RPUConfig] = None,
+                   in_channels: Optional[int] = None) -> Dict[str, Array]:
+        """Effective kernel back as an HWIO conv weight (+ bias).
+
+        ``in_channels`` is recoverable from the column count and the
+        kernel spec; pass it explicitly only for bias-less states whose
+        geometry is ambiguous (never the case for states built by
+        :meth:`init`).
+        """
+        cfg = state.meta.cfg if cfg is None else cfg
+        spec = state.meta.conv
+        w_eff = tile_lib.effective_weights(state.tile(), cfg)
+        feat = w_eff.shape[1] - (1 if state.meta.bias else 0)
+        kh, kw = spec.kernel
+        c = in_channels if in_channels is not None else feat // (kh * kw)
+        out = {"w": w_eff[:, :feat].reshape(-1, c, kh, kw)
+               .transpose(2, 3, 1, 0)}
+        if state.meta.bias:
+            out["b"] = w_eff[:, -1]
+        return out

@@ -45,7 +45,20 @@ def _flatten_with_paths(tree: PyTree) -> Tuple[List[Tuple[str, Any]], Any]:
     return out, treedef
 
 
+class _HostKeyData:
+    """Host-side snapshot of a typed PRNG-key leaf (see _to_numpy_host)."""
+
+    __slots__ = ("data", "dtype", "shape")
+
+    def __init__(self, key_leaf):
+        self.data = np.asarray(jax.random.key_data(key_leaf))
+        self.dtype = str(key_leaf.dtype)
+        self.shape = tuple(key_leaf.shape)
+
+
 def _to_numpy(leaf) -> np.ndarray:
+    if isinstance(leaf, _HostKeyData):
+        return leaf.data
     if hasattr(leaf, "dtype") and str(leaf.dtype).startswith("key<"):
         return np.asarray(jax.random.key_data(leaf))
     arr = np.asarray(leaf)
@@ -55,6 +68,9 @@ def _to_numpy(leaf) -> np.ndarray:
 
 
 def _leaf_meta(leaf) -> Dict:
+    if isinstance(leaf, _HostKeyData):
+        return {"shape": list(leaf.shape), "dtype": leaf.dtype,
+                "is_key": True}
     dt = str(leaf.dtype) if hasattr(leaf, "dtype") else "float32"
     return {"shape": list(np.shape(leaf)), "dtype": dt,
             "is_key": dt.startswith("key<")}
@@ -186,7 +202,12 @@ class AsyncCheckpointer:
 
 
 def _to_numpy_host(leaf):
-    """Device->host copy on the training thread (cheap, async-safe)."""
+    """Device->host copy on the training thread (cheap, async-safe).
+
+    Typed PRNG keys are snapshotted too (``_HostKeyData``): the analog
+    tile seeds live in the donated ``params`` carry, so leaving the device
+    buffer for the background thread races with the next step's donation
+    deleting it ("Array has been deleted")."""
     if hasattr(leaf, "dtype") and str(leaf.dtype).startswith("key<"):
-        return leaf   # keys handled at serialisation time
+        return _HostKeyData(leaf)
     return np.asarray(leaf) if hasattr(leaf, "shape") else leaf

@@ -13,6 +13,7 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro.analog.policy import AnalogPolicy
 from repro.core.device import RPUConfig
 
 
@@ -72,8 +73,35 @@ class ModelConfig:
                                           # selective: save projection
                                           # outputs, recompute attention
                                           # internals/elementwise)
-    # analog (RPU) integration: when set, projections run on analog tiles
+    # analog (RPU) integration -------------------------------------------
+    # analog_policy: ordered per-layer rules (repro.analog.policy) — dense
+    # projections matched by a rule are converted to AnalogState tiles at
+    # init (repro.analog.convert), everything else stays digital.
+    analog_policy: Optional[AnalogPolicy] = None
+    # analog: DEPRECATED single global RPUConfig forced uniformly onto
+    # every projection; kept as a shim — it resolves to a uniform policy
+    # (see resolved_analog_policy).  Prefer analog_policy.
     analog: Optional[RPUConfig] = None
+
+    @property
+    def uses_analog(self) -> bool:
+        return self.analog is not None or self.analog_policy is not None
+
+    def resolved_analog_policy(self) -> Optional[AnalogPolicy]:
+        """The per-layer policy, with the legacy ``analog`` field shimmed
+        to rules covering exactly the projections the pre-policy code
+        forced analog (the attention/cross/MLP/SSM block projections —
+        never the unembed/adapter denses)."""
+        if self.analog_policy is not None:
+            return self.analog_policy
+        if self.analog is not None:
+            from repro.analog.policy import AnalogRule
+            legacy = ("*/attn/*", "*/cross/*", "*/mlp/*", "*/ssm/*",
+                      "*/shared/*")
+            return AnalogPolicy(rules=tuple(
+                AnalogRule(pat, self.analog, "ModelConfig.analog (legacy)")
+                for pat in legacy))
+        return None
 
     @property
     def head_dim(self) -> int:

@@ -44,9 +44,20 @@ def canonical(name: str) -> str:
     return name
 
 
-def get_config(name: str, smoke: bool = False):
+def get_config(name: str, smoke: bool = False, analog_policy=None):
+    """Resolve an arch id; ``analog_policy`` (an
+    :class:`repro.analog.policy.AnalogPolicy` or a textual spec like
+    ``"*attn*=managed,*mlp*=rpu_baseline"``) attaches per-layer analog
+    rules to the returned config."""
     mod = importlib.import_module(f"repro.configs.{canonical(name)}")
-    return mod.smoke_config() if smoke else mod.CONFIG
+    cfg = mod.smoke_config() if smoke else mod.CONFIG
+    if analog_policy is not None:
+        import dataclasses
+        if isinstance(analog_policy, str):
+            from repro.analog.presets import parse_policy
+            analog_policy = parse_policy(analog_policy)
+        cfg = dataclasses.replace(cfg, analog_policy=analog_policy)
+    return cfg
 
 
 def all_configs(smoke: bool = False) -> Dict[str, object]:

@@ -159,6 +159,16 @@ class RPUConfig:
                                if conv_stream_chunk is None
                                else conv_stream_chunk))
 
+    def normalized_for_lm(self) -> "RPUConfig":
+        """Canonical normalization for LM dense tiles (the one place the
+        ``dtype=f32 + seeded_maps`` rule lives — it used to be copy-pasted
+        in both ``layers.dense_init`` and ``dense_apply``): simulate in
+        float32 regardless of the model's param dtype, and regenerate the
+        device population from the tile seed instead of storing the maps
+        (2-3x HBM saving at billion-parameter scale, module docstring)."""
+        return dataclasses.replace(self, dtype=jnp.float32,
+                                   seeded_maps=True)
+
     @property
     def amplification(self) -> None:
         raise AttributeError("use update.amplification_factors(cfg, lr)")

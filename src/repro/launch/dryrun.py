@@ -132,10 +132,15 @@ def _r_seqpar(rules):
 
 
 def _v_bm2(cfg):
-    if cfg.analog is None:
-        return cfg
-    return dataclasses.replace(
-        cfg, analog=dataclasses.replace(cfg.analog, bm_mode="two_phase"))
+    if cfg.analog is not None:
+        return dataclasses.replace(
+            cfg, analog=dataclasses.replace(cfg.analog,
+                                            bm_mode="two_phase"))
+    if cfg.analog_policy is not None:
+        return dataclasses.replace(
+            cfg, analog_policy=cfg.analog_policy.map_configs(
+                lambda c: dataclasses.replace(c, bm_mode="two_phase")))
+    return cfg
 
 
 def _v_bm2_noremat(cfg):
@@ -179,12 +184,18 @@ VARIANTS = {
 
 def lower_cell(arch: str, cell: ShapeCell, *, multi_pod: bool = False,
                rules_name: str = "tp_fsdp",
-               analog: bool = False, variant: str = "") -> Dict[str, Any]:
+               analog: bool = False, analog_policy: str = "",
+               variant: str = "") -> Dict[str, Any]:
     """Lower + compile one cell; returns the analysis record."""
-    cfg = registry.get_config(arch)
-    if analog:
+    cfg = registry.get_config(arch,
+                              analog_policy=analog_policy or None)
+    if analog and not analog_policy:
+        # uniform per-layer policy: every dense projection on managed tiles
+        from repro.analog.policy import AnalogPolicy
         from repro.core.device import rpu_nm_bm_um_bl1
-        cfg = dataclasses.replace(cfg, analog=rpu_nm_bm_um_bl1())
+        cfg = dataclasses.replace(
+            cfg, analog_policy=AnalogPolicy.uniform(rpu_nm_bm_um_bl1(),
+                                                    name="managed"))
     ok, why = cell_applicable(cfg, cell)
     if not ok:
         return {"arch": arch, "cell": cell.name, "status": "skipped",
@@ -318,8 +329,10 @@ def _train_with_seed(step):
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              rules_name: str = "tp_fsdp", analog: bool = False,
+             analog_policy: str = "",
              variant: str = "", force: bool = False) -> Dict[str, Any]:
     os.makedirs(RESULTS_DIR, exist_ok=True)
+    analog = analog or bool(analog_policy)
     suffix = ("_pod2" if multi_pod else "") + \
         (f"_{rules_name}" if rules_name != "tp_fsdp" else "") + \
         ("_analog" if analog else "") + \
@@ -336,7 +349,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     try:
         rec = lower_cell(arch, cell, multi_pod=multi_pod,
                          rules_name=rules_name, analog=analog,
-                         variant=variant)
+                         analog_policy=analog_policy, variant=variant)
         rec["variant"] = variant
         hlo_text = rec.pop("_hlo_text", None)
         if hlo_text is not None:
@@ -392,6 +405,9 @@ def main():
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--rules", type=str, default="tp_fsdp")
     ap.add_argument("--analog", action="store_true")
+    ap.add_argument("--analog-policy", type=str, default="",
+                    help="per-layer analog policy spec (implies --analog); "
+                         "see repro.analog.presets.parse_policy")
     ap.add_argument("--variant", type=str, default="")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--reanalyse", action="store_true")
@@ -408,11 +424,13 @@ def main():
                 for cell in ALL_SHAPES:
                     run_cell(arch, cell.name, multi_pod=mp,
                              rules_name=args.rules, analog=args.analog,
+                             analog_policy=args.analog_policy,
                              variant=args.variant, force=args.force)
     else:
         for mp in meshes:
             run_cell(args.arch, args.shape, multi_pod=mp,
                      rules_name=args.rules, analog=args.analog,
+                     analog_policy=args.analog_policy,
                      variant=args.variant, force=args.force)
 
 

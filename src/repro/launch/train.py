@@ -4,9 +4,14 @@ Composes every substrate: mesh + logical sharding rules, deterministic
 resumable data pipeline, scan-fused multi-step dispatch (``--engine scan``,
 default — up to ``--scan-chunk`` train steps per XLA dispatch with donated
 carries; ``--engine python`` keeps the legacy one-dispatch-per-step loop as
-the oracle), digital AdamW or analog pulse-SGD (``--analog``, with
-``--tile-mesh R,C`` sharding every crossbar tile over the 2-D array mesh —
-see docs/scaling.md), async sharded checkpointing, straggler watchdog,
+the oracle), digital AdamW or per-layer analog training
+(``--analog-policy '*attn*=managed,*mlp*=rpu_baseline'`` — first-match-wins
+rules over layer paths, presets with per-rule knob modifiers like
+``managed:bm_mode=two_phase:tile_grid=2x2``; bare ``--analog`` keeps the
+historical uniform-managed behaviour; either way the resolved per-layer
+table prints at startup — see docs/architecture.md "Analog API" and
+docs/scaling.md for tile-grid sharding), async sharded checkpointing,
+straggler watchdog,
 preemption-safe shutdown, restart-with-retry, optional gradient compression
 for the DP all-reduce.
 
@@ -59,8 +64,75 @@ def _build_batch(cfg, toks, seq):
     return batch_d
 
 
+def _parse_tile_mesh(tile_mesh: Optional[str]):
+    if not tile_mesh:
+        return None
+    try:
+        gr, gc = (int(v) for v in tile_mesh.split(","))
+    except ValueError:
+        raise ValueError(
+            f"--tile-mesh expects 'R,C' (two comma-separated "
+            f"integers), got {tile_mesh!r}") from None
+    from repro.core import tile_grid
+    from repro.core.device import RPUConfig
+    placed = tile_grid.grid_is_sharded(RPUConfig(tile_grid=(gr, gc)))
+    print(f"[train] tile grid {gr}x{gc}: "
+          + (f"sharded over crossbar_mesh({gr},{gc})" if placed else
+             f"serial oracle ({jax.device_count()} device(s) "
+             f"< {gr * gc} sub-tiles)"))
+    return gr, gc
+
+
+def _build_analog_policy(analog_policy: str, bm_mode: str,
+                         use_pallas: bool, tile_mesh: Optional[str],
+                         update_chunk: Optional[int]):
+    """Resolve the per-layer policy for ``--analog-policy``.
+
+    The spec takes a preset name (with optional ``:field=value``
+    modifiers), inline ``pattern=preset`` rules, or a JSON rules file
+    (``repro.analog.presets.parse_policy``).  The deprecated global knobs
+    (--bm-mode/--use-pallas/--tile-mesh/--update-chunk) are applied to
+    every rule, but only the knobs that were *explicitly set* — a default
+    --bm-mode never clobbers a per-rule ``:bm_mode=...`` modifier.
+    """
+    import dataclasses
+    from repro.analog import presets
+
+    pol = presets.parse_policy(analog_policy)
+    grid = _parse_tile_mesh(tile_mesh)
+    if update_chunk:
+        print(f"[train] streaming update cycle: chunk={update_chunk} "
+              "(bit-identical, constant pulse-stream memory)")
+
+    def override(c):
+        if bm_mode != "iterative":
+            c = dataclasses.replace(c, bm_mode=bm_mode)
+        if use_pallas:
+            c = dataclasses.replace(c, use_pallas=True)
+        if update_chunk:
+            c = c.with_streaming(update_chunk=update_chunk)
+        if grid:
+            c = c.with_tile_grid(*grid)
+        return c
+
+    if bm_mode != "iterative" or use_pallas or update_chunk or grid:
+        pol = pol.map_configs(override)
+    return pol
+
+
+def _print_policy_table(params) -> None:
+    """Resolved per-layer policy table (satisfies 'no silent single-bool')."""
+    from repro.analog.convert import conversion_plan
+    from repro.analog.presets import describe_cfg
+    rows = conversion_plan(params)
+    print("[train] resolved analog policy (layer -> rule -> knobs):")
+    for path, label, c in rows:
+        print(f"  {path:<34} {label:<28} {describe_cfg(c)}")
+
+
 def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
-          analog: bool = False, ckpt_dir: Optional[str] = None,
+          analog: bool = False, analog_policy: Optional[str] = None,
+          ckpt_dir: Optional[str] = None,
           ckpt_every: int = 50, multi_pod: bool = False,
           lr: float = 3e-4, log_every: int = 1, seed: int = 0,
           engine: str = "scan", scan_chunk: int = 10,
@@ -69,7 +141,17 @@ def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
           update_chunk: Optional[int] = None):
     import dataclasses
     cfg = registry.get_config(arch, smoke=smoke)
-    if analog:
+    if analog_policy:
+        pol = _build_analog_policy(analog_policy, bm_mode, use_pallas,
+                                   tile_mesh, update_chunk)
+        cfg = dataclasses.replace(cfg, analog_policy=pol,
+                                  param_dtype=jnp.float32)
+        analog = True
+    elif analog:
+        # bare --analog: the exact historical semantics — the uniform
+        # 'managed' config on the block projections (ModelConfig.analog
+        # legacy scope: never unembed/adapter) trained with pure
+        # analog_sgd — but now with the resolved table printed at startup.
         from repro.core.device import rpu_nm_bm_um_bl1
         rpu = dataclasses.replace(rpu_nm_bm_um_bl1(), bm_mode=bm_mode,
                                   use_pallas=use_pallas)
@@ -77,20 +159,9 @@ def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
             rpu = rpu.with_streaming(update_chunk=update_chunk)
             print(f"[train] streaming update cycle: chunk={update_chunk} "
                   "(bit-identical, constant pulse-stream memory)")
-        if tile_mesh:
-            try:
-                gr, gc = (int(v) for v in tile_mesh.split(","))
-            except ValueError:
-                raise ValueError(
-                    f"--tile-mesh expects 'R,C' (two comma-separated "
-                    f"integers), got {tile_mesh!r}") from None
-            rpu = rpu.with_tile_grid(gr, gc)
-            from repro.core import tile_grid
-            placed = tile_grid.grid_is_sharded(rpu)
-            print(f"[train] tile grid {gr}x{gc}: "
-                  + (f"sharded over crossbar_mesh({gr},{gc})" if placed else
-                     f"serial oracle ({jax.device_count()} device(s) "
-                     f"< {gr * gc} sub-tiles)"))
+        grid = _parse_tile_mesh(tile_mesh)
+        if grid:
+            rpu = rpu.with_tile_grid(*grid)
         cfg = dataclasses.replace(cfg, analog=rpu,
                                   param_dtype=jnp.float32)
     elif tile_mesh:
@@ -137,6 +208,8 @@ def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
     ctx = shd.use_sharding(mesh, rules) if mesh is not None else _null()
     with ctx:
         params, opt_state, start = init_state()
+        if analog:
+            _print_policy_table(params)
         losses = []
         step = start
         while step < steps:
@@ -202,7 +275,21 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--analog", action="store_true")
+    ap.add_argument("--analog", action="store_true",
+                    help="train projections on analog RPU tiles; without "
+                         "--analog-policy this keeps the historical "
+                         "semantics (managed preset on the block "
+                         "projections, pure analog pulse-SGD)")
+    ap.add_argument("--analog-policy", type=str, default=None,
+                    metavar="SPEC",
+                    help="per-layer analog policy (implies --analog): a "
+                         "preset name ('managed', 'rpu_baseline', ...), "
+                         "inline first-match-wins rules like "
+                         "'*attn*=managed,*mlp*=rpu_baseline' (unmatched "
+                         "layers stay digital; presets take "
+                         "':field=value' modifiers, e.g. "
+                         "'managed:bm_mode=two_phase:tile_grid=2x2'), or "
+                         "a JSON rules file — see repro.analog.presets")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--ckpt-dir", type=str, default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -214,20 +301,27 @@ def main():
                     help="steps fused per dispatch with --engine scan")
     ap.add_argument("--bm-mode", choices=("iterative", "two_phase"),
                     default="iterative",
-                    help="bound-management mode for --analog: the paper's "
-                         "halve-and-retry loop, or the fixed-latency "
-                         "two-phase retry (fusable into one managed-read "
-                         "launch with --use-pallas)")
+                    help="[deprecated: use a ':bm_mode=...' rule modifier "
+                         "in --analog-policy] global bound-management mode "
+                         "for --analog: the paper's halve-and-retry loop, "
+                         "or the fixed-latency two-phase retry (fusable "
+                         "into one managed-read launch with --use-pallas)")
     ap.add_argument("--use-pallas", action="store_true",
-                    help="route analog reads/updates through the Pallas "
-                         "kernels (fused managed read for two_phase/off BM)")
+                    help="[deprecated: use ':use_pallas=true' rule "
+                         "modifiers in --analog-policy] route analog "
+                         "reads/updates through the Pallas kernels (fused "
+                         "managed read for two_phase/off BM)")
     ap.add_argument("--tile-mesh", type=str, default=None, metavar="R,C",
-                    help="with --analog: decompose every analog tile into an "
+                    help="[deprecated: use ':tile_grid=RxC' rule "
+                         "modifiers in --analog-policy] "
+                         "with --analog: decompose every analog tile into an "
                          "RxC sub-tile grid on the 'array_row' x 'array_col' "
                          "crossbar device mesh (serial oracle when fewer "
                          "than R*C devices; see docs/scaling.md)")
     ap.add_argument("--update-chunk", type=int, default=None,
-                    help="with --analog: stream the update cycle's pulse "
+                    help="[deprecated: use ':update_chunk=N' rule "
+                         "modifiers in --analog-policy] "
+                         "with --analog: stream the update cycle's pulse "
                          "streams in chunks of this many (sample) vector "
                          "pairs — bit-identical to the materialized cycle, "
                          "caps the ~BL x activation stream memory "
@@ -235,6 +329,7 @@ def main():
     args = ap.parse_args()
     res = train(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
                 smoke=args.smoke, analog=args.analog,
+                analog_policy=args.analog_policy,
                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                 multi_pod=args.multi_pod, lr=args.lr, engine=args.engine,
                 scan_chunk=args.scan_chunk, bm_mode=args.bm_mode,

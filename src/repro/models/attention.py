@@ -38,11 +38,11 @@ def init(key, cfg: ModelConfig, *, cross: bool = False):
     """QKVO projection params.  Layout: q (d, H, hd) etc., o (H, hd, d)."""
     d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     ks = jax.random.split(key, 4)
-    an = cfg.analog
 
+    # init is always digital; per-layer analog conversion happens in
+    # init_lm via the resolved AnalogPolicy (repro.analog.convert)
     def mk(k, d_in, d_out, axes):
-        return L.dense_init(k, d_in, d_out, axes, cfg.param_dtype,
-                            analog=an)
+        return L.dense_init(k, d_in, d_out, axes, cfg.param_dtype)
 
     params: Dict[str, Any] = {}
     axes: Dict[str, Any] = {}

@@ -5,21 +5,25 @@ identical structure, where ``axes`` leaves are tuples of *logical* axis names
 consumed by ``repro.distributed.sharding`` (NamedSharding for params,
 with_sharding_constraint for activations).  ``apply_*`` functions are pure.
 
-When a :class:`repro.core.device.RPUConfig` is attached to the model config,
-``dense_apply`` routes the projection through the analog tile layer — the
-paper's technique as a first-class substrate for every architecture
+Analog integration is *parameter-typed*: ``dense_apply`` dispatches on
+whether it holds a plain ``{"w"[, "b"]}`` dict or an
+:class:`repro.analog.modules.AnalogState` tile (produced either directly by
+``dense_init(analog=...)`` or by ``repro.analog.convert.convert_to_analog``
+rewriting a digital tree under an ``AnalogPolicy``).  The device config
+travels with the state, so no call site threads an ``RPUConfig`` by hand —
+the paper's technique as a first-class substrate for every architecture
 (DESIGN.md §4).
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analog.modules import AnalogLinear, AnalogState
 from repro.distributed.sharding import shard
 
 Array = jax.Array
@@ -35,34 +39,51 @@ def truncated_normal_init(key, shape, scale, dtype):
 
 def dense_init(key, d_in: int, d_out: int, axes: Tuple[str, str],
                dtype, scale: Optional[float] = None,
-               analog=None) -> Tuple[Params, Params]:
-    """Weight (d_in, d_out) with logical axes; optional analog tile state."""
+               analog=None, bias: bool = False) -> Tuple[Params, Params]:
+    """Weight (d_in, d_out) with logical axes; optional analog tile state.
+
+    ``analog`` (an :class:`RPUConfig`) puts the projection on a crossbar
+    tile directly at init; policy-driven models instead init digital and
+    convert afterwards (``repro.analog.convert``).  ``bias=True`` adds a
+    digital bias vector — or, on the analog path, the paper's always-on
+    extra input column trained on the array (the LeNet layout)."""
     scale = scale if scale is not None else d_in ** -0.5
     if analog is not None:
-        from repro.core import analog_linear
-        acfg = dataclasses.replace(analog, dtype=jnp.float32,
-                                   seeded_maps=True)
+        from repro.analog.modules import state_axes
+        acfg = analog.normalized_for_lm()
         w_init = truncated_normal_init(key, (d_out, d_in), scale, jnp.float32)
-        st = analog_linear.init(key, d_in, d_out, acfg, bias=False,
-                                w_init=w_init)
+        st = AnalogLinear.init(key, d_in, d_out, acfg, bias=bias,
+                               w_init=w_init)
         # physical tile layout is (out, in): transpose the logical axes
-        return ({"w": st.w, "seed": st.seed},
-                {"w": (axes[1], axes[0]), "seed": None})
+        return st, state_axes(st, (axes[1], axes[0]))
     w = truncated_normal_init(key, (d_in, d_out), scale, dtype)
+    if bias:
+        return ({"w": w, "b": jnp.zeros((d_out,), dtype)},
+                {"w": axes, "b": (axes[1],)})
     return {"w": w}, {"w": axes}
 
 
 def dense_apply(p: Params, x: Array, *, analog=None, key=None,
                 lr=1.0) -> Array:
-    if "seed" in p:   # analog tile
+    if isinstance(p, AnalogState):
+        return AnalogLinear.apply(p, x.astype(jnp.float32), key,
+                                  lr=lr).astype(x.dtype)
+    if "seed" in p:   # deprecated pre-AnalogState {"w","seed"} layout
         from repro.core import analog_linear
         from repro.core.tile import TileState
-        acfg = dataclasses.replace(analog, dtype=jnp.float32,
-                                   seeded_maps=True)
+        if analog is None:
+            raise ValueError(
+                "legacy {'w','seed'} analog params need the RPUConfig via "
+                "the `analog` argument; rebuild the state with "
+                "repro.analog (AnalogLinear / convert_to_analog)")
+        acfg = analog.normalized_for_lm()
         st = TileState(w=p["w"], maps=None, seed=p["seed"])
         return analog_linear.apply(st, x.astype(jnp.float32), key, acfg,
                                    lr, bias=False).astype(x.dtype)
-    return jnp.einsum("...d,df->...f", x, p["w"].astype(x.dtype))
+    y = jnp.einsum("...d,df->...f", x, p["w"].astype(x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
 
 
 # --- norms -------------------------------------------------------------------

@@ -7,10 +7,20 @@ softmax.  Trainable parameters (incl. biases) live in four crossbar tiles:
     K1: 16 x 26   (5*5*1  + 1)     K2: 32 x 401  (5*5*16 + 1)
     W3: 128 x 513 (512 + 1)        W4: 10 x 129  (128 + 1)
 
-Each tile carries its *own* :class:`RPUConfig`, enabling the paper's
-selective per-layer experiments (Fig. 4: eliminate variations on K1/K2 only,
-13-device mapping on K2 only, etc.).  ``mode='digital'`` gives the exact
-FP-baseline with standard autodiff + SGD.
+Built on the unified analog API (``repro.analog``): every tile is an
+:class:`~repro.analog.modules.AnalogState` initialised through
+``AnalogConv2d`` / ``AnalogLinear``, and per-layer device configs resolve
+through an :class:`~repro.analog.policy.AnalogPolicy` — the paper's
+selective per-layer experiments (Fig. 4: eliminate variations on K1/K2
+only, 13-device mapping on K2 only) as ordered pattern rules::
+
+    LeNetConfig.from_policy(parse_policy("K2=k2_multi_device,*=managed"))
+
+A layer a policy resolves to *digital* (explicit ``digital`` rule or no
+match) runs the exact FP path while its siblings stay analog.  The legacy
+``layer_cfgs`` dict keyed on ``("K1","K2","W3","W4")`` still works as a
+deprecated shim (it becomes an exact-name policy internally);
+``mode='digital'`` gives the all-FP baseline with standard autodiff + SGD.
 """
 
 from __future__ import annotations
@@ -21,9 +31,10 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core import analog_linear, conv_mapping
+from repro.analog.modules import AnalogConv2d, AnalogLinear, AnalogState
+from repro.analog.policy import AnalogPolicy
+from repro.core import conv_mapping
 from repro.core.device import RPUConfig
-from repro.core.tile import TileState
 
 Array = jax.Array
 LAYERS = ("K1", "K2", "W3", "W4")
@@ -34,25 +45,65 @@ Padding = Union[str, Sequence[Tuple[int, int]]]
 class LeNetConfig:
     mode: str = "analog"                     # 'analog' | 'digital'
     lr: float = 0.01                         # paper's eta
-    layer_cfgs: Optional[Mapping[str, RPUConfig]] = None  # per-tile configs
+    # Per-tile device configs, one of (policy wins when both are set):
+    #   policy     — AnalogPolicy over the layer names "K1".."W4" (the API)
+    #   layer_cfgs — DEPRECATED literal dict shim; becomes an exact-name
+    #                policy internally (docs/architecture.md, Analog API)
+    policy: Optional[AnalogPolicy] = None
+    layer_cfgs: Optional[Mapping[str, RPUConfig]] = None
     # conv padding for K1/K2: the lax names or explicit per-dim pairs
     # ((top, bottom), (left, right)) — e.g. ((2, 2), (2, 2)) trains the
     # SAME-padded 28x28 -> 14x14 -> 7x7 variant; init() sizes W3 from the
     # resulting geometry.  Default reproduces the paper (VALID).
     conv_padding: Padding = "VALID"
 
-    def cfg(self, layer: str) -> RPUConfig:
-        if self.layer_cfgs is None:
-            return RPUConfig()
-        return self.layer_cfgs[layer]
+    # --- per-layer resolution ------------------------------------------------
+    def resolved(self, layer: str) -> Optional[RPUConfig]:
+        """Device config for one tile; ``None`` means the layer is digital
+        (only possible under a policy — the legacy paths always resolve)."""
+        if self.policy is not None:
+            return self.policy.resolve(layer)
+        if self.layer_cfgs is not None:
+            return self.layer_cfgs.get(layer, RPUConfig())
+        return RPUConfig()
 
+    def cfg(self, layer: str) -> RPUConfig:
+        """Legacy accessor: the tile's config, defaulted for digital
+        layers (their state still needs a device population to exist)."""
+        r = self.resolved(layer)
+        return r if r is not None else RPUConfig()
+
+    def layer_mode(self, layer: str) -> str:
+        """'digital' | 'analog' for one tile under the global mode +
+        per-layer policy resolution."""
+        if self.mode == "digital":
+            return "digital"
+        if self.policy is not None and self.policy.resolve(layer) is None:
+            return "digital"
+        return self.mode
+
+    def label(self, layer: str) -> str:
+        return self.policy.label_for(layer) if self.policy is not None \
+            else layer
+
+    # --- constructors --------------------------------------------------------
     @staticmethod
     def uniform(cfg: RPUConfig, mode: str = "analog",
                 lr: float = 0.01) -> "LeNetConfig":
         return LeNetConfig(mode=mode, lr=lr,
                            layer_cfgs={l: cfg for l in LAYERS})
 
+    @staticmethod
+    def from_policy(policy: AnalogPolicy, mode: str = "analog",
+                    lr: float = 0.01,
+                    conv_padding: Padding = "VALID") -> "LeNetConfig":
+        return LeNetConfig(mode=mode, lr=lr, policy=policy,
+                           conv_padding=conv_padding)
+
     def replace_layer(self, layer: str, cfg: RPUConfig) -> "LeNetConfig":
+        if self.policy is not None:
+            return dataclasses.replace(
+                self, policy=self.policy.prepend(layer, cfg, layer))
         d = dict(self.layer_cfgs)
         d[layer] = cfg
         return dataclasses.replace(self, layer_cfgs=d)
@@ -62,6 +113,9 @@ class LeNetConfig:
                            ) -> "LeNetConfig":
         """Enable the streaming (constant-memory) pipeline on every tile —
         bit-identical training, bounded pulse-stream/patch live bytes."""
+        if self.policy is not None:
+            return dataclasses.replace(self, policy=self.policy.map_configs(
+                lambda c: c.with_streaming(update_chunk, conv_stream_chunk)))
         d = {l: c.with_streaming(update_chunk, conv_stream_chunk)
              for l, c in (self.layer_cfgs or
                           {l: RPUConfig() for l in LAYERS}).items()}
@@ -88,14 +142,19 @@ def feature_sizes(cfg: LeNetConfig, hw: Tuple[int, int] = (28, 28)
     return p1, p2, p2[0] * p2[1] * 32
 
 
-def init(key: Array, cfg: LeNetConfig) -> Dict[str, TileState]:
+def init(key: Array, cfg: LeNetConfig) -> Dict[str, AnalogState]:
     k1, k2, k3, k4 = jax.random.split(key, 4)
     _, _, flat = feature_sizes(cfg)
+    pad = cfg.conv_padding
     return {
-        "K1": conv_mapping.init(k1, 1, 16, 5, cfg.cfg("K1")),
-        "K2": conv_mapping.init(k2, 16, 32, 5, cfg.cfg("K2")),
-        "W3": analog_linear.init(k3, flat, 128, cfg.cfg("W3")),
-        "W4": analog_linear.init(k4, 128, 10, cfg.cfg("W4")),
+        "K1": AnalogConv2d.init(k1, 1, 16, 5, cfg.cfg("K1"), padding=pad,
+                                label=cfg.label("K1")),
+        "K2": AnalogConv2d.init(k2, 16, 32, 5, cfg.cfg("K2"), padding=pad,
+                                label=cfg.label("K2")),
+        "W3": AnalogLinear.init(k3, flat, 128, cfg.cfg("W3"),
+                                label=cfg.label("W3")),
+        "W4": AnalogLinear.init(k4, 128, 10, cfg.cfg("W4"),
+                                label=cfg.label("W4")),
     }
 
 
@@ -107,8 +166,8 @@ def _maxpool2(x: Array) -> Array:
     return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
 
 
-def apply(params: Dict[str, TileState], images: Array, key: Optional[Array],
-          cfg: LeNetConfig) -> Array:
+def apply(params: Dict[str, AnalogState], images: Array,
+          key: Optional[Array], cfg: LeNetConfig) -> Array:
     """images (B, 28, 28, 1) -> logits (B, 10).
 
     ``key`` seeds the analog read/update noise; it may be ``None`` in
@@ -121,19 +180,24 @@ def apply(params: Dict[str, TileState], images: Array, key: Optional[Array],
         key = jax.random.key(0)
     ks = jax.random.split(key, 4)
     lr = cfg.lr
-    mode = cfg.mode
-
-    h = conv_mapping.apply(params["K1"], images, ks[0], cfg.cfg("K1"), lr,
-                           kernel=5, padding=cfg.conv_padding, mode=mode)
+    # apply-time config/padding overrides keep post-init retrofits
+    # (with_stream_chunks on an existing run) and the legacy semantics
+    # where the LeNetConfig, not the state, is the source of truth.
+    h = AnalogConv2d.apply(params["K1"], images, ks[0], lr=lr,
+                           mode=cfg.layer_mode("K1"), cfg=cfg.cfg("K1"),
+                           padding=cfg.conv_padding)
     h = _maxpool2(jnp.tanh(h))                       # (B, 12, 12, 16)
-    h = conv_mapping.apply(params["K2"], h, ks[1], cfg.cfg("K2"), lr,
-                           kernel=5, padding=cfg.conv_padding, mode=mode)
+    h = AnalogConv2d.apply(params["K2"], h, ks[1], lr=lr,
+                           mode=cfg.layer_mode("K2"), cfg=cfg.cfg("K2"),
+                           padding=cfg.conv_padding)
     h = _maxpool2(jnp.tanh(h))                       # (B, 4, 4, 32)
     h = h.reshape(h.shape[0], -1)                    # (B, 512 for VALID)
-    h = jnp.tanh(analog_linear.apply(params["W3"], h, ks[2], cfg.cfg("W3"),
-                                     lr, mode=mode))
-    logits = analog_linear.apply(params["W4"], h, ks[3], cfg.cfg("W4"), lr,
-                                 mode=mode)          # (B, 10)
+    h = jnp.tanh(AnalogLinear.apply(params["W3"], h, ks[2], lr=lr,
+                                    mode=cfg.layer_mode("W3"),
+                                    cfg=cfg.cfg("W3")))
+    logits = AnalogLinear.apply(params["W4"], h, ks[3], lr=lr,
+                                mode=cfg.layer_mode("W4"),
+                                cfg=cfg.cfg("W4"))   # (B, 10)
     return logits
 
 

@@ -18,15 +18,15 @@ def init(key, cfg: ModelConfig, d_ff: int = 0):
     d = cfg.d_model
     f = d_ff or cfg.d_ff
     ks = jax.random.split(key, 3)
-    an = cfg.analog
+    # digital init; analog conversion is policy-driven (repro.analog)
     p: Dict[str, Any] = {}
     a: Dict[str, Any] = {}
     p["wi"], a["wi"] = L.dense_init(ks[0], d, f, ("embed", "mlp"),
-                                    cfg.param_dtype, analog=an)
+                                    cfg.param_dtype)
     p["wg"], a["wg"] = L.dense_init(ks[1], d, f, ("embed", "mlp"),
-                                    cfg.param_dtype, analog=an)
+                                    cfg.param_dtype)
     p["wo"], a["wo"] = L.dense_init(ks[2], f, d, ("mlp", "embed"),
-                                    cfg.param_dtype, analog=an)
+                                    cfg.param_dtype)
     return p, a
 
 

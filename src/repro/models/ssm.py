@@ -43,16 +43,16 @@ def init(key, cfg: ModelConfig):
     d = cfg.d_model
     d_in, h, p_dim, n = dims(cfg)
     ks = jax.random.split(key, 6)
-    an = cfg.analog
 
     params: Dict[str, Any] = {}
     axes: Dict[str, Any] = {}
-    # fused input projection: [z, x, B, C, dt]
+    # fused input projection: [z, x, B, C, dt] — digital init; analog
+    # conversion is policy-driven (repro.analog)
     d_proj = 2 * d_in + 2 * n + h
     params["in_proj"], axes["in_proj"] = L.dense_init(
-        ks[0], d, d_proj, ("embed", "mlp"), cfg.param_dtype, analog=an)
+        ks[0], d, d_proj, ("embed", "mlp"), cfg.param_dtype)
     params["out_proj"], axes["out_proj"] = L.dense_init(
-        ks[1], d_in, d, ("mlp", "embed"), cfg.param_dtype, analog=an)
+        ks[1], d_in, d, ("mlp", "embed"), cfg.param_dtype)
     # depthwise causal conv over [x, B, C]
     conv_ch = d_in + 2 * n
     params["conv_w"] = L.truncated_normal_init(

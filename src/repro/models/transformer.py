@@ -139,6 +139,16 @@ def init_lm(key, cfg: ModelConfig) -> Tuple[Params, Params]:
         p["unembed"], a["unembed"] = L.dense_init(
             ks[4], cfg.d_model, cfg.vocab, ("embed", "vocab"),
             cfg.param_dtype)
+    # Per-layer analog conversion: matched dense sites (slash-joined paths
+    # like "layers/attn/q") swap to AnalogState tiles; the blocks' init code
+    # above stays analog-agnostic.  The legacy ModelConfig.analog field
+    # resolves to a uniform match-everything policy.
+    policy = cfg.resolved_analog_policy()
+    if policy is not None:
+        from repro.analog.convert import convert_to_analog
+        from repro.core.device import RPUConfig
+        p, a = convert_to_analog(p, a, policy, key=ks[5],
+                                 normalize=RPUConfig.normalized_for_lm)
     return p, a
 
 
@@ -191,14 +201,17 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig, *,
     """
     x = L.embed_apply(params["embed"], tokens)
     if frontend_embeds is not None:
+        fk = None if akey is None else jax.random.fold_in(akey, 201)
         fe = L.dense_apply(params["adapter"],
-                           frontend_embeds.astype(x.dtype))
+                           frontend_embeds.astype(x.dtype), key=fk)
         x = jnp.concatenate([fe, x], axis=1)
 
     enc_out = None
     if cfg.encoder_layers > 0:
         assert enc_embeds is not None
-        e = L.dense_apply(params["adapter"], enc_embeds.astype(x.dtype)) \
+        ek = None if akey is None else jax.random.fold_in(akey, 202)
+        e = L.dense_apply(params["adapter"], enc_embeds.astype(x.dtype),
+                          key=ek) \
             if "adapter" in params else enc_embeds.astype(x.dtype)
         e_pos = jnp.arange(e.shape[1])[None]
         enc_cfg = cfg
@@ -216,7 +229,8 @@ def forward(params: Params, tokens: Array, cfg: ModelConfig, *,
     if cfg.tie_embeddings:
         logits = L.unembed_apply(params["embed"], x)
     else:
-        logits = L.dense_apply(params["unembed"], x)
+        uk = None if akey is None else jax.random.fold_in(akey, 203)
+        logits = L.dense_apply(params["unembed"], x, key=uk)
         logits = shard(logits, "batch", "seq", "vocab")
     return logits, aux
 

@@ -13,7 +13,7 @@ and digital LM training; all are jit/shard-friendly pytrees.
 
 from repro.optim.optimizers import (  # noqa: F401
     OptState, Optimizer, adamw, analog_sgd, assert_scan_carry_safe,
-    momentum, sgd)
+    mixed_analog, momentum, sgd)
 from repro.optim.compression import (  # noqa: F401
     compress_gradients, decompress_gradients, ef_int8_compressor,
     topk_compressor)

@@ -92,6 +92,59 @@ def analog_sgd() -> Optimizer:
     return Optimizer(init, update)
 
 
+def mixed_analog(digital: Optimizer) -> Optimizer:
+    """Per-leaf routing for policy-converted models (mixed analog/digital).
+
+    Leaves living inside an :class:`repro.analog.modules.AnalogState` take
+    the hardware-exact analog step ``p - w_bar`` (the layers' custom VJP
+    already folds learning rate, pulse statistics and the device-bound clip
+    into the cotangent — any other transformation would break the physics);
+    every other leaf is delegated to ``digital`` (e.g. AdamW for the
+    embeddings, norms, routers and policy-unmatched projections).
+
+    The digital optimizer's state mirrors the tree *structure* but its
+    entries for analog leaves are rank-0 sentinels: ``init`` masks the
+    analog leaves to scalars before delegating, and ``update`` masks their
+    gradients to float0 so the digital optimizer skips them entirely (no
+    fp32 moments, no dead moment math for tile weights).  The state stays
+    scan-carry-safe and structurally aligned with the params tree.
+    """
+
+    def _flags(params):
+        from repro.analog.modules import AnalogState
+        return jax.tree_util.tree_map(
+            lambda n: (jax.tree_util.tree_map(lambda _: True, n)
+                       if isinstance(n, AnalogState) else False),
+            params, is_leaf=lambda x: isinstance(x, AnalogState))
+
+    def init(params):
+        masked = jax.tree_util.tree_map(
+            lambda is_analog, p: jnp.zeros(()) if is_analog else p,
+            _flags(params), params)
+        return digital.init(masked)
+
+    def update(grads, state, params):
+        flags = _flags(params)
+
+        def f0(is_analog, g):
+            import numpy as np
+            return np.zeros((), jax.dtypes.float0) if is_analog else g
+
+        masked_grads = jax.tree_util.tree_map(f0, flags, grads)
+        d_params, d_state = digital.update(masked_grads, state, params)
+
+        def astep(p, g):
+            return p if _skippable(p, g) else p - g
+
+        a_params = jax.tree_util.tree_map(astep, params, grads)
+        new_params = jax.tree_util.tree_map(
+            lambda is_analog, ap, dp: ap if is_analog else dp,
+            flags, a_params, d_params)
+        return new_params, d_state
+
+    return Optimizer(init, update)
+
+
 def sgd(lr: float) -> Optimizer:
     def init(params):
         return ()

@@ -148,14 +148,19 @@ def train(cfg: lenet.LeNetConfig, *, epochs: int = 15, batch: int = 8,
 
 def _describe(cfg: lenet.LeNetConfig) -> Dict:
     out = {"mode": cfg.mode, "lr": cfg.lr}
-    if cfg.layer_cfgs:
-        for name, c in cfg.layer_cfgs.items():
+    if cfg.layer_cfgs or cfg.policy:
+        for name in lenet.LAYERS:
+            c = cfg.resolved(name)
+            if c is None:        # policy pinned this layer digital
+                out[name] = {"mode": "digital",
+                             "rule": cfg.label(name)}
+                continue
             out[name] = {
                 "bl": c.bl, "nm": c.noise_management, "bm": c.bound_management,
                 "um": c.update_management, "noise": c.read_noise,
                 "bound": c.out_bound, "dpw": c.devices_per_weight,
                 "dtod": c.dw_min_dtod, "ctoc": c.dw_min_ctoc,
-                "imb": c.imbalance_dtod,
+                "imb": c.imbalance_dtod, "rule": cfg.label(name),
             }
     return out
 

@@ -128,12 +128,14 @@ def _reject_crossbar_mesh_conflict(cfg) -> None:
     the composed placement would be wrong anyway.  Pick one: shard the
     batch (grid falls back to its serial oracle) or shard the tiles.
     """
-    if getattr(cfg, "mode", None) != "analog" or not getattr(
-            cfg, "layer_cfgs", None):
+    if getattr(cfg, "mode", None) != "analog" or not hasattr(
+            cfg, "resolved"):
         return
     from repro.core import tile_grid
-    offending = sorted(layer for layer, c in cfg.layer_cfgs.items()
-                       if tile_grid.grid_is_sharded(c))
+    from repro.models.lenet import LAYERS
+    resolved = {layer: cfg.resolved(layer) for layer in LAYERS}
+    offending = sorted(layer for layer, c in resolved.items()
+                       if c is not None and tile_grid.grid_is_sharded(c))
     if offending:
         raise ValueError(
             f"layers {offending} route through a sharded crossbar tile grid; "

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer
-from repro.optim import Optimizer, adamw, analog_sgd
+from repro.optim import Optimizer, adamw, analog_sgd, mixed_analog
 
 Array = jax.Array
 
@@ -27,7 +27,7 @@ AUX_LOSS_WEIGHT = 0.01
 def loss_fn(params, batch: Dict[str, Array], cfg: ModelConfig,
             key: Optional[Array] = None) -> Tuple[Array, Dict[str, Array]]:
     """Next-token cross entropy (+ MoE aux).  batch['tokens'] (B, S)."""
-    akey = key if cfg.analog is not None else None
+    akey = key if cfg.uses_analog else None
     logits, aux = transformer.forward(
         params, batch["tokens"][:, :-1], cfg,
         frontend_embeds=batch.get("frontend_embeds"),
@@ -43,7 +43,12 @@ def loss_fn(params, batch: Dict[str, Array], cfg: ModelConfig,
 
 
 def default_optimizer(cfg: ModelConfig, lr: float = 3e-4) -> Optimizer:
+    if cfg.analog_policy is not None:
+        # mixed per-layer policies: analog tiles take the hardware-exact
+        # ``p - w_bar`` step, unmatched (digital) layers keep AdamW
+        return mixed_analog(adamw(lr))
     if cfg.analog is not None:
+        # legacy uniform-analog shim keeps its historical optimizer
         return analog_sgd()
     return adamw(lr)
 

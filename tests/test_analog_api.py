@@ -1,0 +1,433 @@
+"""Unified analog-module API: policies, presets, conversion, mixed LM/LeNet.
+
+Covers the policy-resolution contract (glob/regex precedence,
+first-match-wins, unmatched -> digital), the ``convert_to_analog`` /
+``to_digital`` round trip (bit-exact effective weights under seeded maps),
+the LeNet shim regression (legacy ``layer_cfgs`` == policy API, identical
+training trajectories), the analog bias column vs digital bias parity, and
+the acceptance scenario: an LM training with a *mixed* per-layer policy —
+attention projections on managed tiles, FFN on the RPU baseline, unembed
+digital — selected purely through ``AnalogPolicy`` rules.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analog import (AnalogLinear, AnalogPolicy, AnalogState,
+                          conversion_plan, convert_to_analog, get_preset,
+                          parse_policy, resolve_spec, to_digital)
+from repro.analog.policy import AnalogRule
+from repro.core import device as dev
+from repro.core.device import RPUConfig
+
+
+# ---------------------------------------------------------------------------
+# Policy resolution
+# ---------------------------------------------------------------------------
+
+def test_policy_first_match_wins():
+    a, b = dev.rpu_baseline(), dev.rpu_nm_bm()
+    pol = AnalogPolicy.of(("K*", a, "first"), ("K2", b, "second"))
+    assert pol.resolve("K2") is a          # earlier rule shadows the later
+    pol2 = AnalogPolicy.of(("K2", b, "specific"), ("K*", a, "general"))
+    assert pol2.resolve("K2") is b
+    assert pol2.resolve("K1") is a
+
+
+def test_policy_glob_crosses_slashes_and_regex():
+    cfg = dev.rpu_nm_bm()
+    pol = AnalogPolicy.of(("*attn*", cfg, "glob"),
+                          ("re:^layers/mlp/w[ig]$", cfg, "regex"))
+    assert pol.resolve("layers/attn/q") is cfg
+    assert pol.resolve("enc_layers/attn/o") is cfg
+    assert pol.resolve("layers/mlp/wi") is cfg
+    assert pol.resolve("layers/mlp/wg") is cfg
+    assert pol.resolve("layers/mlp/wo") is None      # regex excludes wo
+
+
+def test_policy_unmatched_and_explicit_digital():
+    cfg = dev.rpu_nm_bm()
+    pol = AnalogPolicy.of(("unembed", None, "digital"), ("*", cfg, "all"))
+    assert pol.resolve("unembed") is None            # explicit digital rule
+    assert pol.resolve("layers/attn/q") is cfg
+    assert AnalogPolicy().resolve("anything") is None  # no rules -> digital
+    assert pol.label_for("unembed") == "digital"
+
+
+def test_policy_prepend_and_map_configs():
+    pol = AnalogPolicy.uniform(dev.rpu_nm_bm(), name="base")
+    pol = pol.prepend("K2", dev.rpu_full(13), "k2")
+    assert pol.resolve("K2").devices_per_weight == 13
+    assert pol.resolve("K1").devices_per_weight == 1
+    pol2 = pol.map_configs(lambda c: dataclasses.replace(
+        c, bm_mode="two_phase"))
+    assert pol2.resolve("K1").bm_mode == "two_phase"
+    assert pol2.resolve("K2").devices_per_weight == 13
+
+
+# ---------------------------------------------------------------------------
+# Presets + spec parsing
+# ---------------------------------------------------------------------------
+
+def test_preset_registry():
+    assert get_preset("digital") is None
+    assert get_preset("rpu_baseline") == dev.rpu_baseline()
+    m = get_preset("managed")
+    assert m.noise_management and m.bound_management \
+        and m.update_management and m.bl == 1
+    assert get_preset("k2_multi_device").devices_per_weight == 13
+    lm = get_preset("lm_managed")
+    assert lm.seeded_maps and lm.dtype == jnp.float32
+    nv = get_preset("fig4_no_variation")
+    assert nv.dw_min_dtod == 0.0 and nv.w_bound_dtod == 0.0
+    with pytest.raises(KeyError):
+        get_preset("nope")
+
+
+def test_spec_modifiers():
+    c = resolve_spec("managed:bm_mode=two_phase:use_pallas=true"
+                     ":tile_grid=2x4:update_chunk=8")
+    assert c.bm_mode == "two_phase" and c.use_pallas
+    assert c.tile_grid == (2, 4) and c.update_chunk == 8
+    with pytest.raises(KeyError):
+        resolve_spec("managed:not_a_field=1")
+    with pytest.raises(ValueError):
+        resolve_spec("digital:bm_mode=two_phase")
+
+
+def test_parse_policy_inline_preset_and_file(tmp_path):
+    # bare preset name -> uniform
+    pol = parse_policy("managed")
+    assert pol.resolve("anything/at/all").update_management
+    # bare preset WITH modifiers (the documented CLI form) stays uniform
+    pol = parse_policy("managed:bm_mode=two_phase:tile_grid=2x2")
+    c = pol.resolve("layers/attn/q")
+    assert c.bm_mode == "two_phase" and c.tile_grid == (2, 2)
+    # single inline rule, glob and regex patterns
+    assert parse_policy("*attn*=managed").resolve("layers/attn/q") \
+        .update_management
+    pol = parse_policy("re:^layers/mlp/.*$=managed:bm_mode=two_phase")
+    assert pol.resolve("layers/mlp/wi").bm_mode == "two_phase"
+    assert pol.resolve("layers/attn/q") is None
+    # inline rules, order preserved
+    pol = parse_policy("*attn*=managed,*mlp*=rpu_baseline,unembed=digital")
+    assert pol.resolve("layers/attn/q").noise_management
+    assert not pol.resolve("layers/mlp/wi").noise_management
+    assert pol.resolve("unembed") is None
+    # rules file
+    f = tmp_path / "rules.json"
+    f.write_text('[["K2", "k2_multi_device"], ["*", "nm_bm"]]')
+    pol = parse_policy(str(f))
+    assert pol.resolve("K2").devices_per_weight == 13
+    assert pol.resolve("K1").devices_per_weight == 1
+
+
+# ---------------------------------------------------------------------------
+# convert_to_analog / to_digital
+# ---------------------------------------------------------------------------
+
+def _toy_params():
+    k = jax.random.key(0)
+    w1 = jax.random.normal(jax.random.key(1), (8, 6)) * 0.05
+    b1 = jax.random.normal(jax.random.key(2), (6,)) * 0.02
+    w2 = jax.random.normal(jax.random.key(3), (6, 4)) * 0.05
+    params = {"proj": {"w": w1, "b": b1}, "head": {"w": w2},
+              "norm": {"scale": jnp.ones((8,))}}
+    axes = {"proj": {"w": ("embed", "mlp"), "b": ("mlp",)},
+            "head": {"w": ("embed", "vocab")},
+            "norm": {"scale": ("embed_act",)}}
+    return params, axes, k
+
+
+def test_convert_roundtrip_bit_exact_and_unmatched_untouched():
+    params, axes, key = _toy_params()
+    pol = parse_policy("proj=lm_managed")
+    p2, a2 = convert_to_analog(params, axes, pol, key=key)
+    assert isinstance(p2["proj"], AnalogState)
+    assert p2["proj"].meta.bias
+    assert p2["head"] is params["head"]            # unmatched -> untouched
+    assert p2["norm"] is params["norm"]            # not a dense site
+    # physical layout: (out, in + bias col), transposed logical axes
+    assert p2["proj"].w.shape == (6, 9)
+    assert a2["proj"].w == ("mlp", "embed")
+    back = to_digital(p2)
+    np.testing.assert_array_equal(np.asarray(back["proj"]["w"]),
+                                  np.asarray(params["proj"]["w"]))
+    np.testing.assert_array_equal(np.asarray(back["proj"]["b"]),
+                                  np.asarray(params["proj"]["b"]))
+    np.testing.assert_array_equal(np.asarray(back["head"]["w"]),
+                                  np.asarray(params["head"]["w"]))
+
+
+def test_convert_stacked_layers():
+    n, d_in, d_out = 3, 5, 7
+    w = jax.random.normal(jax.random.key(0), (n, d_in, d_out)) * 0.05
+    params = {"layers": {"mlp": {"wi": {"w": w}}}}
+    axes = {"layers": {"mlp": {"wi": {"w": ("layers", "embed", "mlp")}}}}
+    p2, a2 = convert_to_analog(params, axes, parse_policy("*wi*=lm_managed"),
+                               key=jax.random.key(9))
+    st = p2["layers"]["mlp"]["wi"]
+    assert isinstance(st, AnalogState)
+    assert st.w.shape == (n, d_out, d_in)          # stacked physical tiles
+    assert st.seed.shape == (n,)
+    assert a2["layers"]["mlp"]["wi"].w == ("layers", "mlp", "embed")
+    back = to_digital(p2)["layers"]["mlp"]["wi"]
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(w))
+    # per-depth device populations differ (independent seeds)
+    maps0 = dev.sample_device_maps(st.seed[0], d_out, d_in, st.meta.cfg)
+    maps1 = dev.sample_device_maps(st.seed[1], d_out, d_in, st.meta.cfg)
+    assert float(jnp.max(jnp.abs(maps0.dw_up - maps1.dw_up))) > 0.0
+
+
+def test_conversion_is_deterministic():
+    params, axes, key = _toy_params()
+    pol = parse_policy("*=lm_managed")
+    p1, _ = convert_to_analog(params, axes, pol, key=key)
+    p2, _ = convert_to_analog(params, axes, pol, key=key)
+    np.testing.assert_array_equal(np.asarray(p1["proj"].w),
+                                  np.asarray(p2["proj"].w))
+    np.testing.assert_array_equal(
+        jax.random.key_data(p1["proj"].seed),
+        jax.random.key_data(p2["proj"].seed))
+
+
+def test_conversion_plan_rows():
+    params, axes, key = _toy_params()
+    pol = parse_policy("proj=managed")
+    p2, _ = convert_to_analog(
+        params, axes, pol, key=key,
+        normalize=RPUConfig.normalized_for_lm)
+    rows = dict((path, label) for path, label, _ in conversion_plan(p2))
+    assert rows == {"proj": "managed", "head": "digital"}
+    # the LM normalizer is applied on top of the preset
+    assert p2["proj"].meta.cfg.seeded_maps
+
+
+# ---------------------------------------------------------------------------
+# Analog bias column vs digital bias (satellite: bias=False lifted)
+# ---------------------------------------------------------------------------
+
+def _ideal_cfg():
+    return dataclasses.replace(
+        dev.rpu_baseline(), read_noise=0.0, out_bound=float("inf"),
+        w_bound=100.0, w_bound_dtod=0.0, seeded_maps=True,
+        dtype=jnp.float32)
+
+
+def test_analog_bias_column_matches_digital_bias():
+    cfg = _ideal_cfg()
+    w = jax.random.normal(jax.random.key(0), (8, 5)) * 0.2
+    b = jax.random.normal(jax.random.key(1), (5,)) * 0.1
+    st = AnalogLinear.from_digital(jax.random.key(2), w, cfg, b=b)
+    x = jax.random.normal(jax.random.key(3), (4, 8))
+    y = AnalogLinear.apply(st, x, jax.random.key(4))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w + b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dense_init_bias_paths():
+    from repro.models import layers as L
+    # digital: separate bias vector
+    p, a = L.dense_init(jax.random.key(0), 6, 4, ("embed", "mlp"),
+                        jnp.float32, bias=True)
+    assert p["b"].shape == (4,) and a["b"] == ("mlp",)
+    x = jax.random.normal(jax.random.key(1), (2, 6))
+    np.testing.assert_array_equal(
+        np.asarray(L.dense_apply(p, x)), np.asarray(x @ p["w"] + p["b"]))
+    # analog: always-on bias column on the tile
+    st, _ = L.dense_init(jax.random.key(0), 6, 4, ("embed", "mlp"),
+                         jnp.float32, analog=_ideal_cfg(), bias=True)
+    assert isinstance(st, AnalogState) and st.meta.bias
+    assert st.w.shape == (4, 7)
+    y = L.dense_apply(st, x, key=jax.random.key(2))
+    # bias column initialises at zero -> matches the bias-free projection
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(x @ np.asarray(st.w)[:, :-1].T),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dense_apply_legacy_seed_dict_shim():
+    from repro.models import layers as L
+    cfg = dev.rpu_nm_bm()
+    st, _ = L.dense_init(jax.random.key(0), 6, 4, ("embed", "mlp"),
+                         jnp.float32, analog=cfg)
+    legacy = {"w": st.w, "seed": st.seed}
+    x = jax.random.normal(jax.random.key(1), (2, 6))
+    k = jax.random.key(2)
+    y_new = L.dense_apply(st, x, key=k)
+    y_old = L.dense_apply(legacy, x, analog=cfg, key=k)
+    np.testing.assert_array_equal(np.asarray(y_new), np.asarray(y_old))
+    with pytest.raises(ValueError):
+        L.dense_apply(legacy, x, key=k)   # legacy dict without its config
+
+
+# ---------------------------------------------------------------------------
+# LeNet: shim regression + per-layer digital under a policy
+# ---------------------------------------------------------------------------
+
+def test_lenet_policy_equals_legacy_layer_cfgs():
+    """New-API (policy) LeNet == old-API (layer_cfgs) LeNet, bit for bit."""
+    from repro.models import lenet
+    from repro.train import cnn
+    rpu = dev.rpu_nm_bm()
+    legacy = lenet.LeNetConfig.uniform(rpu, mode="analog")
+    policy = lenet.LeNetConfig.from_policy(AnalogPolicy.uniform(rpu))
+    kw = dict(epochs=1, batch=8, n_train=128, n_test=64, seed=0,
+              verbose=False, eval_every_epoch=False, return_params=True)
+    r_old = cnn.train(legacy, **kw)
+    r_new = cnn.train(policy, **kw)
+    for name in lenet.LAYERS:
+        np.testing.assert_array_equal(
+            np.asarray(r_old["params"][name].w),
+            np.asarray(r_new["params"][name].w), err_msg=name)
+    assert r_old["final_error"] == r_new["final_error"]
+
+
+def test_lenet_k2_multi_device_via_policy():
+    """The paper's selective 13-device K2 mapping as a policy rule."""
+    from repro.models import lenet
+    cfg = lenet.LeNetConfig.from_policy(
+        parse_policy("K2=k2_multi_device,*=managed"))
+    params = lenet.init(jax.random.key(0), cfg)
+    assert params["K2"].w.shape == (416, 401)      # 13 x 32 replicas
+    assert params["K1"].w.shape == (16, 26)
+    assert params["K2"].meta.label == "k2_multi_device"
+
+
+def test_lenet_mixed_digital_layer_trains():
+    """A policy can pin individual LeNet tiles digital mid-network."""
+    from repro.models import lenet
+    cfg = lenet.LeNetConfig.from_policy(
+        parse_policy("W4=digital,*=nm_bm"))
+    assert cfg.layer_mode("W4") == "digital"
+    assert cfg.layer_mode("K1") == "analog"
+    params = lenet.init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (4, 28, 28, 1))
+    y = jax.random.randint(jax.random.key(2), (4,), 0, 10)
+    grads = jax.jit(lambda p, xx, yy, k: jax.grad(
+        lenet.loss_fn, allow_int=True)(p, xx, yy, k, cfg))(
+            params, x, y, jax.random.key(3))
+    for name in lenet.LAYERS:
+        g = grads[name].w
+        assert np.isfinite(np.asarray(g)).all()
+        assert float(jnp.max(jnp.abs(g))) > 0.0, name
+
+
+# ---------------------------------------------------------------------------
+# LM acceptance: mixed per-layer policy end to end
+# ---------------------------------------------------------------------------
+
+def _mixed_lm_cfg():
+    from repro.configs import registry
+    cfg = registry.get_config(
+        "deepseek_7b", smoke=True,
+        analog_policy="*attn*=managed,*mlp*=rpu_baseline,unembed=digital")
+    return dataclasses.replace(cfg, param_dtype=jnp.float32,
+                               act_dtype=jnp.float32, remat=False)
+
+
+def test_lm_mixed_policy_structure_and_training():
+    from repro.configs.base import ShapeCell
+    from repro.launch import specs as S
+    from repro.train import lm
+
+    cfg = _mixed_lm_cfg()
+    params, opt_state, axes = lm.init_train_state(jax.random.key(0), cfg)
+
+    # structure: attention analog-managed, FFN analog-baseline, unembed fp
+    q = params["layers"]["attn"]["q"]
+    wi = params["layers"]["mlp"]["wi"]
+    assert isinstance(q, AnalogState) and q.meta.cfg.noise_management
+    assert q.meta.cfg.seeded_maps        # LM normalization applied
+    assert isinstance(wi, AnalogState) \
+        and not wi.meta.cfg.noise_management
+    assert isinstance(params["unembed"], dict)    # stayed digital
+    rows = dict((p, l) for p, l, _ in conversion_plan(params))
+    assert rows["layers/attn/q"] == "managed"
+    assert rows["layers/mlp/wi"] == "rpu_baseline"
+    assert rows["unembed"] == "digital"
+
+    batch = S.concrete_inputs(cfg, ShapeCell("smoke", 32, 2, "train"))
+    step, _ = lm.make_train_step(cfg)
+    step = jax.jit(step)
+    p1, o1, m1 = step(params, opt_state, batch, jax.random.key(1))
+    p2, o2, m2 = step(p1, o1, batch, jax.random.key(2))
+    assert np.isfinite(float(m2["loss"]))
+
+    def moved(a, b):
+        return float(jnp.max(jnp.abs(b - a))) > 0.0
+
+    # analog tiles moved by pulse updates; digital leaves moved by AdamW
+    assert moved(params["layers"]["attn"]["q"].w, p2["layers"]["attn"]["q"].w)
+    assert moved(params["layers"]["mlp"]["wi"].w, p2["layers"]["mlp"]["wi"].w)
+    assert moved(params["unembed"]["w"], p2["unembed"]["w"])
+    assert moved(params["final_norm"]["scale"], p2["final_norm"]["scale"])
+
+
+def test_lm_mixed_policy_scan_engine_and_abstract_state():
+    """The scan engine carries mixed params; eval_shape matches concrete."""
+    from repro.train import lm
+    from repro.train import engine as eng
+    from repro.optim import assert_scan_carry_safe
+
+    cfg = _mixed_lm_cfg()
+    opt = lm.default_optimizer(cfg, lr=1e-3)
+    params, opt_state, axes = lm.init_train_state(jax.random.key(0), cfg,
+                                                  opt)
+    assert_scan_carry_safe(opt_state)
+    ps, os_, axes_a = lm.abstract_train_state(jax.random.key(0), cfg, opt)
+    assert (jax.tree_util.tree_structure(ps)
+            == jax.tree_util.tree_structure(params))
+
+    multi, _ = lm.make_scan_train_step(cfg, opt)
+    toks = jax.random.randint(jax.random.key(1), (2, 2, 16), 0, cfg.vocab)
+    keys = eng.fold_in_keys(jax.random.key(2), jnp.arange(2))
+    p2, o2, metrics = jax.jit(multi)(params, opt_state, {"tokens": toks},
+                                     keys)
+    assert metrics["loss"].shape == (2,)
+    assert np.isfinite(np.asarray(metrics["loss"])).all()
+
+
+def test_launch_overrides_do_not_clobber_rule_modifiers():
+    """A default --bm-mode next to --update-chunk must not reset a
+    per-rule ':bm_mode=two_phase' modifier (only explicitly-set legacy
+    knobs override)."""
+    from repro.launch.train import _build_analog_policy
+    pol = _build_analog_policy("*=managed:bm_mode=two_phase",
+                               bm_mode="iterative", use_pallas=False,
+                               tile_mesh=None, update_chunk=4)
+    c = pol.resolve("layers/attn/q")
+    assert c.bm_mode == "two_phase" and c.update_chunk == 4
+
+
+def test_mixed_analog_state_is_scalar_for_tiles():
+    """mixed_analog must not carry full AdamW moments for analog leaves."""
+    from repro.optim import adamw, mixed_analog
+    cfg = _mixed_lm_cfg()
+    from repro.train import lm
+    opt = mixed_analog(adamw(1e-3))
+    params, opt_state, _ = lm.init_train_state(jax.random.key(0), cfg, opt)
+    q_mu = opt_state["mu"]["layers"]["attn"]["q"]
+    assert q_mu.w.shape == ()                     # sentinel, not (L, o, i)
+    assert opt_state["mu"]["unembed"]["w"].shape \
+        == params["unembed"]["w"].shape           # digital leaf keeps moments
+
+
+def test_legacy_model_config_analog_scope():
+    """ModelConfig.analog shim converts exactly the historical projections."""
+    from repro.configs import registry
+    from repro.train import lm
+    cfg = registry.get_config("deepseek_7b", smoke=True)
+    cfg = dataclasses.replace(cfg, analog=dev.rpu_nm_bm_um_bl1(),
+                              param_dtype=jnp.float32, remat=False)
+    params, _, _ = lm.init_train_state(jax.random.key(0), cfg)
+    assert isinstance(params["layers"]["attn"]["q"], AnalogState)
+    assert isinstance(params["layers"]["mlp"]["wo"], AnalogState)
+    assert isinstance(params["unembed"], dict)     # never analog pre-policy
+    # legacy single-config mode keeps the historical pure analog-SGD
+    opt = lm.default_optimizer(cfg)
+    assert opt.init(params) == ()

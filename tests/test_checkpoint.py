@@ -85,3 +85,24 @@ def test_train_driver_checkpoint_resume(tmp_path):
                ckpt_dir=str(tmp_path), ckpt_every=2, log_every=100)
     # resumed run only performed steps 4..6
     assert len(r2["losses"]) == 2
+
+
+def test_async_save_snapshots_donated_key_leaves(tmp_path):
+    """Typed PRNG-key leaves (analog tile seeds) must be host-snapshotted
+    before the async write: the training loop donates the params carry, so
+    the device buffer is deleted while the background thread serialises
+    (pre-fix: 'Array has been deleted' on every --analog --ckpt-dir run)."""
+    t = {"w": jnp.ones((2, 2)), "seed": jax.random.split(jax.random.key(7), 3)}
+    ck = store.AsyncCheckpointer(str(tmp_path))
+    ck.save(1, t)
+    t["w"].delete()      # simulate donate_argnums reusing the buffers
+    t["seed"].delete()
+    ck.wait()
+    like = {"w": jnp.zeros((2, 2)),
+            "seed": jax.random.split(jax.random.key(0), 3)}
+    restored, _ = store.restore(str(tmp_path), 1, like)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.ones((2, 2)))
+    np.testing.assert_array_equal(
+        jax.random.key_data(restored["seed"]),
+        jax.random.key_data(jax.random.split(jax.random.key(7), 3)))
