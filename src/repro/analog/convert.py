@@ -147,6 +147,46 @@ def to_digital(params: Params) -> Params:
         conv, params, is_leaf=lambda x: isinstance(x, AnalogState))
 
 
+def reshard_analog(params: Params) -> Params:
+    """Re-place every :class:`AnalogState`'s tile arrays for the *current*
+    healthy device pool — the elastic restore path.
+
+    Checkpoints store tile arrays unsharded; after a restart (possibly on a
+    smaller surviving pool, ``distributed.elastic``) each restored tile must
+    land on devices that still exist:
+
+    * a tile whose ``cfg.tile_grid`` can place its crossbar mesh on the
+      healthy pool is device_put **replicated over that mesh** — exactly the
+      layout ``tile_grid._replicated`` pins at every shard_map boundary, so
+      the first training step consumes it without a gather from a lost
+      device;
+    * otherwise (trivial grid, or survivors < blocks: the serial-oracle
+      fallback) it lands on the first healthy device.
+
+    Placement only — the values, and therefore the resumed trajectory, are
+    untouched (pinned bit-exact by tests/test_resume_parity.py)."""
+    from jax.sharding import NamedSharding, PartitionSpec, \
+        SingleDeviceSharding
+    from repro.core.tile_grid import TileGrid
+    from repro.distributed import elastic
+
+    def conv(node):
+        if not isinstance(node, AnalogState):
+            return node
+        g = TileGrid.for_tile(tuple(node.w.shape[-2:]), node.meta.cfg)
+        if g.sharded():
+            target = NamedSharding(g.mesh(), PartitionSpec())
+        else:
+            target = SingleDeviceSharding(elastic.healthy_devices()[0])
+        put = lambda x: None if x is None else jax.device_put(x, target)
+        maps = (None if node.maps is None else
+                jax.tree_util.tree_map(put, node.maps))
+        return AnalogState(put(node.w), maps, put(node.seed), node.meta)
+
+    return jax.tree_util.tree_map(
+        conv, params, is_leaf=lambda x: isinstance(x, AnalogState))
+
+
 def conversion_plan(params: Params,
                     policy: Optional[AnalogPolicy] = None
                     ) -> List[Tuple[str, str, Optional[RPUConfig]]]:

@@ -85,6 +85,16 @@ def _restore_leaf(arr: np.ndarray, meta: Dict):
     return jnp.asarray(arr.astype(meta["dtype"]))
 
 
+def _write_delay_s() -> float:
+    """Per-leaf write delay (seconds) — fault-injection hook.
+
+    The kill-and-resume harness sets ``REPRO_CKPT_WRITE_DELAY`` to hold the
+    background write open long enough that a SIGKILL provably lands
+    mid-serialisation (tests/test_resume_parity.py); production runs never
+    set it and pay a single getenv per save."""
+    return float(os.environ.get("REPRO_CKPT_WRITE_DELAY", "0") or 0.0)
+
+
 def save(directory: str, step: int, tree: PyTree,
          extra_meta: Optional[Dict] = None) -> str:
     """Synchronous atomic checkpoint write; returns the final path."""
@@ -93,11 +103,14 @@ def save(directory: str, step: int, tree: PyTree,
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
+    delay = _write_delay_s()
 
     leaves, treedef = _flatten_with_paths(tree)
     index = {"step": step, "time": time.time(), "treedef_repr": str(treedef),
              "leaves": [], "meta": extra_meta or {}}
     for i, (key, leaf) in enumerate(leaves):
+        if delay:
+            time.sleep(delay)
         arr = _to_numpy(leaf)
         fname = f"leaf_{i:05d}.npy"
         np.save(os.path.join(tmp, fname), arr)
@@ -114,14 +127,41 @@ def save(directory: str, step: int, tree: PyTree,
     return final
 
 
+def _step_of(name: str) -> Optional[int]:
+    """Step number of a well-formed final step dir name, else None."""
+    if not name.startswith("step_") or name.endswith(".tmp"):
+        return None
+    try:
+        return int(name[len("step_"):])
+    except ValueError:
+        return None
+
+
+def _is_complete(path: str) -> bool:
+    """A step dir is complete iff its index parses and every listed leaf
+    file exists.  Because saves write into ``<dir>.tmp`` and rename (an
+    atomic operation), a final dir written by *this* store is always
+    complete — this guards against foreign/corrupted dirs (partial copies,
+    torn rsyncs) so ``latest_step`` never resumes from one."""
+    try:
+        with open(os.path.join(path, "index.json")) as f:
+            index = json.load(f)
+        return all(os.path.exists(os.path.join(path, e["file"]))
+                   for e in index["leaves"])
+    except (OSError, ValueError, KeyError, TypeError):
+        return False
+
+
 def latest_step(directory: str) -> Optional[int]:
+    """Newest *complete* checkpoint step (skips ``.tmp`` partials from
+    killed saves, malformed names, and corrupt/incomplete step dirs)."""
     if not os.path.isdir(directory):
         return None
     steps = []
     for name in os.listdir(directory):
-        if name.startswith("step_") and not name.endswith(".tmp") and \
-                os.path.exists(os.path.join(directory, name, "index.json")):
-            steps.append(int(name.split("_")[1]))
+        s = _step_of(name)
+        if s is not None and _is_complete(os.path.join(directory, name)):
+            steps.append(s)
     return max(steps) if steps else None
 
 
@@ -193,10 +233,18 @@ class AsyncCheckpointer:
             raise err
 
     def _gc(self) -> None:
-        steps = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.directory)
-            if n.startswith("step_") and not n.endswith(".tmp"))
-        for s in steps[:-self.keep]:
+        steps = []
+        for n in os.listdir(self.directory):
+            if n.endswith(".tmp") and n.startswith("step_"):
+                # stale partial from a killed save (one save is in flight at
+                # a time, and it cleans its own tmp before renaming)
+                shutil.rmtree(os.path.join(self.directory, n),
+                              ignore_errors=True)
+                continue
+            s = _step_of(n)
+            if s is not None:
+                steps.append(s)
+        for s in sorted(steps)[:-self.keep]:
             shutil.rmtree(os.path.join(self.directory,
                                        f"step_{s:010d}"), ignore_errors=True)
 

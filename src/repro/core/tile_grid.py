@@ -118,13 +118,15 @@ class TileGrid:
         return self.grid_cols * self.block_cols
 
     def sharded(self) -> bool:
-        """True when enough local devices exist to place the mesh (and the
-        grid is non-trivial)."""
-        return self.n_blocks > 1 and jax.device_count() >= self.n_blocks
+        """True when enough *healthy* local devices exist to place the mesh
+        (and the grid is non-trivial).  Devices the fault runtime marked
+        lost (``distributed.elastic.mark_lost``) don't count — after a
+        device loss the same grid config transparently re-resolves to the
+        bit-identical serial oracle on the survivors."""
+        return self.n_blocks > 1 and _n_healthy() >= self.n_blocks
 
     def mesh(self):
-        return _cached_mesh(self.grid_rows, self.grid_cols,
-                            jax.device_count())
+        return _cached_mesh(self.grid_rows, self.grid_cols, _n_healthy())
 
     def pad_w(self, w: Array) -> Array:
         return jnp.pad(w, ((0, self.rows_pad - self.rows_phys),
@@ -137,20 +139,27 @@ class TileGrid:
         return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
 
 
+def _n_healthy() -> int:
+    from repro.distributed import elastic
+    return elastic.n_healthy()
+
+
 @functools.lru_cache(maxsize=None)
-def _cached_mesh(gr: int, gc: int, n_devices: int):
+def _cached_mesh(gr: int, gc: int, n_healthy: int):
+    # keyed on the healthy count so an elastic shrink/regrow re-resolves the
+    # placement instead of reusing a mesh that claims lost devices
     from repro.distributed import sharding as shd
     return shd.crossbar_mesh(gr, gc)
 
 
 def grid_is_sharded(cfg: RPUConfig) -> bool:
     """True when ``cfg`` routes tile cycles through a *sharded* grid (i.e.
-    a crossbar mesh will claim devices).  Used by the training engines to
-    reject conflicting data-parallel meshes."""
+    a crossbar mesh will claim healthy devices).  Used by the training
+    engines to reject conflicting data-parallel meshes."""
     if cfg.tile_grid is None:
         return False
     gr, gc = cfg.tile_grid
-    return gr * gc > 1 and jax.device_count() >= gr * gc
+    return gr * gc > 1 and _n_healthy() >= gr * gc
 
 
 def _block_key(key: Array, flat_index, n_blocks: int) -> Array:

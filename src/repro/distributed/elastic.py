@@ -6,17 +6,79 @@ builds a *new* mesh from the devices that are actually healthy and
 on it.  ``resize_plan`` computes the largest production-shaped mesh that fits
 the surviving device pool — the policy used after the straggler watchdog or
 a hard node failure trips.
+
+Two pieces live here:
+
+* the **healthy-device pool** — a process-wide registry of devices that the
+  fault runtime has marked lost (``mark_lost`` / ``healthy_devices``).  The
+  crossbar tile-grid placement (``core/tile_grid.py`` via
+  ``sharding.crossbar_mesh``) consults the pool, so after a simulated device
+  loss a restarted step function re-places the grid on the survivors — or
+  falls back to the serial oracle (identical numerics) when the survivors
+  cannot hold one sub-tile per device;
+* the **resize policies** — ``resize_plan`` for the (data, model) LM mesh
+  and ``grid_plan`` for the ``'array_row' x 'array_col'`` crossbar mesh.
+  Crucially, ``grid_plan`` never changes the grid *decomposition* (block
+  shapes and per-block fold_in keys fix the numerics); it only decides the
+  *placement* — sharded when the pool fits, serial otherwise — which is what
+  makes an 8 -> 4 device elastic shrink bit-exact against the serial oracle
+  (tests/test_resume_parity.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+import threading
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh
 
+
+# ---------------------------------------------------------------------------
+# Healthy-device pool (simulated loss registry)
+# ---------------------------------------------------------------------------
+
+_POOL_LOCK = threading.Lock()
+_LOST_IDS: set = set()
+
+
+def mark_lost(devices) -> int:
+    """Mark devices as lost.  ``devices``: an int (lose the *last* ``n``
+    healthy devices — the deterministic choice the tests rely on) or an
+    iterable of device objects.  Returns the new healthy count."""
+    with _POOL_LOCK:
+        if isinstance(devices, int):
+            healthy = [d for d in jax.devices() if d.id not in _LOST_IDS]
+            for d in healthy[len(healthy) - devices:]:
+                _LOST_IDS.add(d.id)
+        else:
+            for d in devices:
+                _LOST_IDS.add(d.id)
+    return n_healthy()
+
+
+def restore_all() -> None:
+    """Clear the loss registry (tests; a real redeploy gets a new process)."""
+    with _POOL_LOCK:
+        _LOST_IDS.clear()
+
+
+def healthy_devices() -> List:
+    """All local devices not marked lost, in ``jax.devices()`` order."""
+    with _POOL_LOCK:
+        lost = set(_LOST_IDS)
+    return [d for d in jax.devices() if d.id not in lost]
+
+
+def n_healthy() -> int:
+    return len(healthy_devices())
+
+
+# ---------------------------------------------------------------------------
+# Resize policies
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class ResizePlan:
@@ -27,7 +89,7 @@ class ResizePlan:
 
     def make_mesh(self, devices: Optional[List] = None) -> Mesh:
         devs = np.asarray(devices if devices is not None
-                          else jax.devices()[:self.n_devices])
+                          else healthy_devices()[:self.n_devices])
         return Mesh(devs.reshape(self.mesh_shape), self.axis_names)
 
 
@@ -38,8 +100,15 @@ def resize_plan(n_available: int, *, model_parallel: int = 16,
     TP degree is kept fixed (changing it would change per-op shardings and
     regenerate different collectives — safe but slower to recompile); the
     data axis absorbs the loss.  E.g. 512 -> 497 healthy chips keeps
-    model=16 and gives data=31 (496 used, 1 idle).
+    model=16 and gives data=31 (496 used, 1 idle).  With fewer devices than
+    the TP degree, TP halves until one data replica fits (last resort; the
+    plan never claims more devices than available and is monotone in
+    ``n_available`` — pinned by the property tests in tests/test_fault.py).
     """
+    if n_available < 1:
+        raise ValueError(f"resize_plan needs >= 1 device, got {n_available}")
+    if model_parallel < 1:
+        raise ValueError(f"model_parallel must be >= 1, got {model_parallel}")
     names = ("pod", "data", "model") if multi_pod else ("data", "model")
     if multi_pod:
         # keep 2 pods if possible, else fall back to single-pod
@@ -57,10 +126,40 @@ def resize_plan(n_available: int, *, model_parallel: int = 16,
             mp = model_parallel
             while mp > 1 and n_available // mp < 1:
                 mp //= 2
-            return ResizePlan((max(n_available // mp, 1), mp),
-                              ("data", "model"),
-                              (n_available // mp) * mp,
-                              n_available - (n_available // mp) * mp)
+            used = (n_available // mp) * mp
+            return ResizePlan((n_available // mp, mp), ("data", "model"),
+                              used, n_available - used)
         shape = (data, model_parallel)
     used = int(np.prod(shape))
     return ResizePlan(shape, names, used, n_available - used)
+
+
+@dataclasses.dataclass(frozen=True)
+class GridPlacement:
+    """Placement decision for one crossbar tile grid on a device pool.
+
+    The grid *decomposition* ``(grid_rows, grid_cols)`` is never changed —
+    block shapes and the per-block ``fold_in`` key schedule pin the numerics
+    — only whether the blocks run device-parallel (``sharded``) or through
+    the bit-identical serial oracle."""
+
+    grid_rows: int
+    grid_cols: int
+    sharded: bool
+    n_devices: int          # devices the placement claims (0 when serial)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.grid_rows * self.grid_cols
+
+
+def grid_plan(n_available: int, grid: Tuple[int, int]) -> GridPlacement:
+    """Place an ``(R, C)`` tile grid on ``n_available`` healthy devices:
+    one sub-tile per device when the pool fits, else the serial oracle."""
+    gr, gc = grid
+    if gr < 1 or gc < 1:
+        raise ValueError(f"invalid tile grid {grid}")
+    need = gr * gc
+    if need > 1 and n_available >= need:
+        return GridPlacement(gr, gc, True, need)
+    return GridPlacement(gr, gc, False, 0)

@@ -1,13 +1,23 @@
 """Fault-tolerance runtime pieces: straggler watchdog, preemption hook,
-restart-with-retry driver glue.
+restart-with-retry driver glue, deterministic fault injection.
 
 On a real multi-host deployment these cooperate with the cluster scheduler;
 everything here is host-side logic (no device code) and unit-testable on CPU.
+
+The :class:`FaultInjector` is the seam the kill-and-resume parity harness
+drives (tests/test_resume_parity.py): configured from ``REPRO_FAULT_MODE``
+/ ``REPRO_FAULT_STEP`` it either hard-kills the process at an exact step
+boundary (``sigkill`` — SIGKILL cannot be caught, so this is a faithful
+preemption), hard-kills while an async checkpoint write is in flight
+(``sigkill_mid_save``), or raises :class:`DeviceLossError` (``device_loss``)
+which the restart driver in ``launch/train.py`` converts into an elastic
+re-shard via ``elastic.mark_lost`` + ``elastic.grid_plan``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import signal
 import threading
 import time
@@ -63,6 +73,16 @@ class StragglerWatchdog:
             self.ewma = self.decay * self.ewma + (1 - self.decay) * step_time
         return rep
 
+    def reset(self) -> None:
+        """Forget the timing baseline (keep the report history).
+
+        Called after an elastic restart: the surviving mesh has a different
+        steady-state step time (e.g. a tile grid falling back to its serial
+        oracle runs slower), and judging it against the pre-failure EWMA
+        would flag every post-restart step as a straggler."""
+        self.ewma = None
+        self._consecutive = 0
+
 
 class PreemptionHandler:
     """SIGTERM-triggered graceful shutdown: request a final checkpoint at the
@@ -86,6 +106,100 @@ class PreemptionHandler:
 
     def simulate(self):           # for tests
         self._requested.set()
+
+
+class DeviceLossError(RuntimeError):
+    """A (simulated) hard loss of ``n_lost`` devices.
+
+    Raised by the fault injector at a step boundary; the restart driver
+    catches it through :func:`run_with_restarts`, marks the devices lost in
+    the elastic pool and rebuilds the step functions so the tile-grid
+    placement re-resolves on the survivors."""
+
+    def __init__(self, n_lost: int, message: Optional[str] = None):
+        super().__init__(message or f"lost {n_lost} device(s)")
+        self.n_lost = n_lost
+
+
+_ENV_INJECTOR: Optional["FaultInjector"] = None
+
+
+class FaultInjector:
+    """Deterministic fault injection at step boundaries (tests/CI only).
+
+    Modes (``REPRO_FAULT_MODE``):
+
+    * ``sigkill`` — ``os.kill(getpid(), SIGKILL)`` the first time
+      :meth:`check` sees ``step >= fault_step``.  Uncatchable, so the run
+      dies exactly as a preempted/OOM-killed worker does: async checkpoint
+      threads are torn down mid-write, no atexit handlers run.
+    * ``sigkill_mid_save`` — same, but only fires when the caller reports an
+      async checkpoint write in flight (``saving=True``); combine with
+      ``REPRO_CKPT_WRITE_DELAY`` to hold the write open so the kill lands
+      mid-serialisation.
+    * ``device_loss`` — raise :class:`DeviceLossError` (``REPRO_FAULT_DROP``
+      devices, default 1) once; the restart driver turns it into an elastic
+      re-shard.
+
+    ``fault_step`` counts the same step units the caller checks with
+    (optimizer steps for the LM driver, epochs for the CNN driver).
+    """
+
+    def __init__(self, mode: str, fault_step: int, drop: int = 1):
+        if mode not in ("sigkill", "sigkill_mid_save", "device_loss"):
+            raise ValueError(f"unknown fault mode {mode!r}")
+        self.mode = mode
+        self.fault_step = fault_step
+        self.drop = drop
+        self.fired = False
+
+    @classmethod
+    def from_env(cls) -> Optional["FaultInjector"]:
+        """Injector configured from the environment — a process-wide
+        SINGLETON: one configured fault fires once per process, so a driver
+        that rebuilds its state after an in-process restart (device loss)
+        does not re-arm the same fault and restart forever."""
+        global _ENV_INJECTOR
+        mode = os.environ.get("REPRO_FAULT_MODE")
+        if not mode:
+            return None
+        if _ENV_INJECTOR is None:
+            step = int(os.environ.get("REPRO_FAULT_STEP", "0"))
+            drop = int(os.environ.get("REPRO_FAULT_DROP", "1"))
+            _ENV_INJECTOR = cls(mode, step, drop)
+        return _ENV_INJECTOR
+
+    def check(self, step: int, *, saving: bool = False,
+              flush=None) -> None:
+        """Called at every step boundary; fires the configured fault once.
+
+        ``saving``: an async checkpoint write was just initiated and is
+        (potentially) still in flight — gates ``sigkill_mid_save``.
+
+        ``flush``: an object with ``wait()`` (the driver's
+        ``AsyncCheckpointer``) drained before raising ``device_loss``: the
+        process *survives* an in-process device loss, so its in-flight
+        async write completes before the restart driver rebuilds — only a
+        hard kill (the sigkill modes) can tear a snapshot."""
+        if self.fired or step < self.fault_step:
+            return
+        if self.mode == "device_loss":
+            self.fired = True
+            if flush is not None:
+                try:
+                    flush.wait()
+                except Exception:   # noqa: BLE001 - the loss outranks it
+                    pass
+            raise DeviceLossError(self.drop)
+        if self.mode == "sigkill_mid_save" and not saving:
+            return
+        self.fired = True
+        # give the background writer a moment to get INTO the leaf loop so
+        # the kill provably lands mid-write (the write-delay env var holds
+        # the window open much longer than this)
+        if self.mode == "sigkill_mid_save":
+            time.sleep(0.05)
+        os.kill(os.getpid(), signal.SIGKILL)
 
 
 def run_with_restarts(make_state: Callable[[], Dict],

@@ -9,20 +9,27 @@ the inter-stage transfer overlap across ticks.  Bubble fraction =
 (S - 1) / (S + M - 1) — choose M >> S.
 
 This composes with the DP/TP rules: the mesh for a PP run is
-``(pipe, data, model)`` and the per-stage block uses the same logical-axis
-annotations as the non-PP path.  Provided as an opt-in alternative to the
-default DP+FSDP+TP preset (DESIGN.md §5); validated in
-``tests/test_distributed.py`` on a multi-device host subprocess.
+``(pipe, data, model)`` — or the nested
+``('pipe', 'data', 'array_row', 'array_col')`` mesh from
+``sharding.nested_mesh``, in which case ``data_axis='data'`` additionally
+shards each microbatch over the data replicas inside the *same* shard_map
+— and the per-stage block uses the same logical-axis annotations as the
+non-PP path.  Provided as an opt-in alternative to the default DP+FSDP+TP
+preset (DESIGN.md §5); the GPipe schedule is pinned against the serial
+layer-stack oracle across S x M grids (including M < S and M == 1) and on
+the nested pipe x data mesh by ``test_pipeline_schedule_grid`` /
+``test_pipeline_on_nested_mesh_with_data_axis`` in
+``tests/test_distributed.py`` (forced multi-device host subprocesses).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 Array = jax.Array
@@ -30,25 +37,33 @@ Array = jax.Array
 
 def pipeline_apply(block_fn: Callable[[Any, Array], Array],
                    stage_params: Any, microbatches: Array, mesh: Mesh,
-                   axis: str = "pipe") -> Array:
+                   axis: str = "pipe",
+                   data_axis: Optional[str] = None) -> Array:
     """Run ``microbatches`` (M, mb, ...) through S pipeline stages.
 
     ``stage_params``: pytree with leading stage axis S (sharded over
     ``axis``); ``block_fn(params_one_stage, x) -> y`` must keep x's shape
     (homogeneous stages — the usual transformer-layer-group case).
 
+    ``data_axis``: name of a data-parallel mesh axis to additionally shard
+    the per-microbatch batch dim (axis 1) over — the nested pipe x data
+    composition (``sharding.nested_mesh``).  Each data shard then runs the
+    full GPipe schedule on its batch slice inside the *same* shard_map;
+    stage parameters stay replicated over ``data_axis``.  ``None`` keeps
+    the pipe-only behaviour on any mesh.
+
     Returns (M, mb, ...) outputs from the final stage.
     """
     n_stages = mesh.shape[axis]
     m = microbatches.shape[0]
-    assert m >= 1
+    assert m >= 1, "need at least one microbatch"
     ticks = n_stages + m - 1
 
-    p_params = jax.tree_util.tree_map(
-        lambda x: NamedSharding(mesh, P(axis)), stage_params)
+    mb_spec = (P(None, data_axis) if data_axis is not None
+               else P())     # microbatches replicated across stages
     in_specs = (jax.tree_util.tree_map(lambda x: P(axis), stage_params),
-                P())          # microbatches replicated across stages
-    out_specs = P()
+                mb_spec)
+    out_specs = mb_spec
 
     def per_stage(params_local, mb_all):
         # params_local leaves: (1, ...) — this stage's slice

@@ -13,6 +13,7 @@ no-ops, so model code never branches on distribution.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import threading
 from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
@@ -62,11 +63,14 @@ def cp_rules(multi_pod: bool = False) -> Rules:
 
 
 def data_mesh(devices: Optional[Sequence[Any]] = None) -> Mesh:
-    """1-D mesh over all (or the given) local devices with a ``'data'``
-    axis — the DDP mesh used by the scan engine's shard_map path."""
+    """1-D mesh over all (or the given) healthy local devices with a
+    ``'data'`` axis — the DDP mesh used by the scan engine's shard_map
+    path."""
     import numpy as np
-    devs = np.asarray(devices if devices is not None else jax.devices())
-    return Mesh(devs.reshape(-1), ("data",))
+    if devices is None:
+        from repro.distributed import elastic
+        devices = elastic.healthy_devices()
+    return Mesh(np.asarray(devices).reshape(-1), ("data",))
 
 
 #: Mesh axis names of the 2-D crossbar tile mesh (row-blocks x col-blocks).
@@ -78,10 +82,15 @@ def crossbar_mesh(grid_rows: int, grid_cols: int,
     """2-D ``'array_row' x 'array_col'`` mesh for a sharded crossbar tile
     grid (``core/tile_grid.py``): device ``(i, j)`` owns physical sub-tile
     ``(i, j)`` of the row-block x col-block decomposition of one logical
-    weight.  Uses the first ``grid_rows * grid_cols`` devices; raises when
-    fewer are available (callers fall back to the serial grid oracle)."""
+    weight.  Uses the first ``grid_rows * grid_cols`` *healthy* devices
+    (the elastic pool — devices marked lost by the fault runtime are never
+    claimed); raises when fewer are available (callers fall back to the
+    serial grid oracle)."""
     import numpy as np
-    devs = np.asarray(devices if devices is not None else jax.devices())
+    if devices is None:
+        from repro.distributed import elastic
+        devices = elastic.healthy_devices()
+    devs = np.asarray(devices)
     need = grid_rows * grid_cols
     if devs.size < need:
         raise ValueError(
@@ -89,6 +98,116 @@ def crossbar_mesh(grid_rows: int, grid_cols: int,
             f"have {devs.size}")
     return Mesh(devs.reshape(-1)[:need].reshape(grid_rows, grid_cols),
                 CROSSBAR_AXES)
+
+
+# --- nested mesh composition -------------------------------------------------
+
+#: Canonical axis order of the composed training mesh.
+NESTED_AXES = ("pipe", "data") + CROSSBAR_AXES
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """One placement plan composing the three device meshes that used to
+    exist separately — pipeline stages (``distributed/pipeline.py``), data
+    replicas (PR 1's ``data_mesh``) and the crossbar tile grid (PR 3's
+    ``crossbar_mesh``) — into a single nested
+    ``('pipe', 'data', 'array_row', 'array_col')`` mesh.
+
+    The plan is pure metadata: :meth:`validate` applies the composition
+    rules against a device pool (the conflict checks the training engines
+    call), :meth:`build` materialises the composed :class:`Mesh`.
+
+    Composition rules enforced by :meth:`validate`:
+
+    * every axis extent >= 1, and the product must fit the pool;
+    * **data x sharded-tile nesting is rejected**: the shard_map
+      data-parallel wrapper spans *all* healthy devices with its 1-D
+      ``'data'`` mesh, and a tile grid that can place its own crossbar mesh
+      would nest a second shard_map over the same devices inside it — jax
+      rejects the nested mesh, and the composed placement would be wrong
+      anyway.  A tile grid *without* enough devices composes fine (it runs
+      through the bit-identical serial oracle on every data shard);
+    * **pipe x sharded-tile** is rejected for the same reason; **pipe x
+      data** composes (one shard_map over both axes of the nested mesh —
+      ``pipeline.pipeline_apply(..., data_axis='data')``, validated in
+      tests/test_distributed.py).
+    """
+
+    pipe: int = 1
+    data: int = 1
+    tile: Optional[Tuple[int, int]] = None
+
+    @property
+    def shape(self) -> Tuple[int, int, int, int]:
+        gr, gc = self.tile if self.tile is not None else (1, 1)
+        return (self.pipe, self.data, gr, gc)
+
+    def _tile_sharded(self, n_devices: int) -> bool:
+        gr, gc = self.tile if self.tile is not None else (1, 1)
+        return gr * gc > 1 and n_devices >= gr * gc
+
+    def placed_shape(self, n_devices: int) -> Tuple[int, int, int, int]:
+        """The shape actually materialised on an ``n_devices`` pool: a tile
+        grid the pool cannot hold collapses to ``(1, 1)`` — it runs through
+        the bit-identical serial grid oracle and claims no mesh devices."""
+        p, d, gr, gc = self.shape
+        if not self._tile_sharded(n_devices):
+            gr = gc = 1
+        return (p, d, gr, gc)
+
+    def n_placed(self, n_devices: int) -> int:
+        p, d, gr, gc = self.placed_shape(n_devices)
+        return p * d * gr * gc
+
+    def validate(self, n_devices: Optional[int] = None) -> "MeshPlan":
+        """Raise ``ValueError`` on an unplaceable composition; else self."""
+        if n_devices is None:
+            from repro.distributed import elastic
+            n_devices = elastic.n_healthy()
+        if any(e < 1 for e in self.shape):
+            raise ValueError(f"mesh plan axes must be >= 1, got {self.shape}")
+        tile_sharded = self._tile_sharded(n_devices)
+        if self.data > 1 and tile_sharded:
+            raise ValueError(
+                f"mesh plan {self.shape}: the data-parallel 'data' mesh "
+                "spans all healthy devices and cannot nest a sharded "
+                "crossbar tile grid inside it. Disable data_parallel or "
+                "drop tile_grid below the device count (the grid then runs "
+                "its bit-identical serial oracle on every data shard).")
+        if self.pipe > 1 and tile_sharded:
+            raise ValueError(
+                f"mesh plan {self.shape}: pipeline stages and a sharded "
+                "crossbar tile grid cannot claim the same devices. Drop "
+                "tile_grid below the device count (serial oracle) or run "
+                "without pipeline parallelism.")
+        if self.n_placed(n_devices) > n_devices:
+            raise ValueError(
+                f"mesh plan {self.shape} needs "
+                f"{self.n_placed(n_devices)} devices, "
+                f"have {n_devices} healthy")
+        return self
+
+    def build(self, devices: Optional[Sequence[Any]] = None) -> Mesh:
+        """Materialise the composed mesh over the (healthy) device pool."""
+        import numpy as np
+        if devices is None:
+            from repro.distributed import elastic
+            devices = elastic.healthy_devices()
+        self.validate(len(devices))
+        shape = self.placed_shape(len(devices))
+        n = int(np.prod(shape))
+        devs = np.asarray(devices).reshape(-1)[:n]
+        return Mesh(devs.reshape(shape), NESTED_AXES)
+
+
+def nested_mesh(*, pipe: int = 1, data: int = 1,
+                tile: Optional[Tuple[int, int]] = None,
+                devices: Optional[Sequence[Any]] = None) -> Mesh:
+    """Build the composed ``('pipe', 'data', 'array_row', 'array_col')``
+    mesh (size-1 axes are kept so in/out specs are uniform across runs).
+    See :class:`MeshPlan` for the composition rules."""
+    return MeshPlan(pipe=pipe, data=data, tile=tile).build(devices)
 
 
 def crossbar_rules() -> Rules:

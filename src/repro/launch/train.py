@@ -35,14 +35,17 @@ import numpy as np
 from repro.checkpoint import store
 from repro.configs import registry
 from repro.data.tokens import SyntheticTokenSource, TokenPipelineConfig
+from repro.distributed import elastic
+from repro.distributed import fault as fault_lib
 from repro.distributed import sharding as shd
-from repro.distributed.fault import PreemptionHandler, StragglerWatchdog
+from repro.distributed.fault import (DeviceLossError, FaultInjector,
+                                     PreemptionHandler, StragglerWatchdog)
 from repro.train import engine as engine_lib
 from repro.train import lm
 
 
 def build_mesh_and_rules(smoke: bool, multi_pod: bool):
-    n = len(jax.devices())
+    n = elastic.n_healthy()
     if smoke or n < 4:
         return None, None
     from repro.launch.mesh import make_production_mesh
@@ -130,6 +133,42 @@ def _print_policy_table(params) -> None:
         print(f"  {path:<34} {label:<28} {describe_cfg(c)}")
 
 
+def _policy_tile_grids(cfg):
+    """Distinct tile grids any analog rule of ``cfg`` could route through."""
+    grids = set()
+    pol = getattr(cfg, "analog_policy", None)
+    if pol is not None:
+        for rule in pol.rules:
+            if rule.cfg is not None and rule.cfg.tile_grid is not None:
+                grids.add(rule.cfg.tile_grid)
+    c = getattr(cfg, "analog", None)
+    if c is not None and c.tile_grid is not None:
+        grids.add(c.tile_grid)
+    return sorted(grids)
+
+
+def _reject_mesh_grid_conflict(cfg, mesh) -> None:
+    """The production (data, model) LM mesh spans every healthy device; an
+    analog rule whose tile grid could also place its crossbar mesh would
+    nest a second shard_map over the same devices.  Delegates to the
+    composition rules in ``sharding.MeshPlan.validate`` (data x
+    sharded-tile); grids the pool cannot hold compose fine through the
+    serial oracle."""
+    if mesh is None:
+        return
+    n = elastic.n_healthy()
+    errors = []
+    for grid in _policy_tile_grids(cfg):
+        try:
+            shd.MeshPlan(data=max(n, 1), tile=grid).validate(n)
+        except ValueError as e:
+            errors.append(str(e))
+    if errors:
+        raise ValueError(
+            "the production mesh cannot compose with sharded crossbar tile "
+            "grids:\n  " + "\n  ".join(errors))
+
+
 def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
           analog: bool = False, analog_policy: Optional[str] = None,
           ckpt_dir: Optional[str] = None,
@@ -138,7 +177,8 @@ def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
           engine: str = "scan", scan_chunk: int = 10,
           bm_mode: str = "iterative", use_pallas: bool = False,
           tile_mesh: Optional[str] = None,
-          update_chunk: Optional[int] = None):
+          update_chunk: Optional[int] = None,
+          max_restarts: int = 0):
     import dataclasses
     cfg = registry.get_config(arch, smoke=smoke)
     if analog_policy:
@@ -171,92 +211,144 @@ def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
         raise ValueError("--update-chunk requires --analog (it chunks the "
                          "pulse-stream update cycle)")
 
-    mesh, rules = build_mesh_and_rules(smoke, multi_pod)
     pipeline = SyntheticTokenSource(TokenPipelineConfig(
         vocab=cfg.vocab, seq_len=seq, global_batch=batch, seed=seed))
 
     opt = lm.default_optimizer(cfg, lr)
-    if engine == "scan":
-        multi_fn, _ = lm.make_scan_train_step(cfg, opt)
-        multi_fn = jax.jit(multi_fn, donate_argnums=(0, 1))
-    else:
-        step_fn, _ = lm.make_train_step(cfg, opt)
-        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
-
     watchdog = StragglerWatchdog()
     preempt = PreemptionHandler().install()
-    ckpt = store.AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
-
-    def init_state():
-        params, opt_state, axes = lm.init_train_state(
-            jax.random.key(seed), cfg, opt)
-        start = 0
-        if ckpt_dir:
-            latest = store.latest_step(ckpt_dir)
-            if latest is not None:
-                shardings = (shd.tree_shardings(axes, mesh, rules,
-                                                like=params)
-                             if mesh is not None else None)
-                (params, opt_state), meta = store.restore(
-                    ckpt_dir, latest, (params, opt_state),
-                    shardings=(shardings, None) if shardings else None)
-                start = latest
-                print(f"[train] restored step {latest}")
-        return params, opt_state, start
-
+    injector = FaultInjector.from_env()
     key_base = jax.random.key(seed + 1)
-    ctx = shd.use_sharding(mesh, rules) if mesh is not None else _null()
-    with ctx:
-        params, opt_state, start = init_state()
-        if analog:
-            _print_policy_table(params)
-        losses = []
-        step = start
-        while step < steps:
-            t0 = time.time()
-            if engine == "scan":
-                # Scanned chunk: one dispatch for up to ``scan_chunk``
-                # steps, clipped (only when checkpointing) so checkpoints
-                # still land exactly on the ``ckpt_every`` cadence.
-                chunk = min(scan_chunk, steps - step)
-                if ckpt and ckpt_every > 0:
-                    chunk = min(chunk, ckpt_every - (step % ckpt_every))
-                toks = jnp.asarray(np.stack(
-                    [pipeline.batch_at(i)
-                     for i in range(step, step + chunk)]))
-                batch_d = _build_batch(cfg, toks, seq)
-                keys = engine_lib.fold_in_keys(
-                    key_base, jnp.arange(step, step + chunk))
-                params, opt_state, metrics = multi_fn(
-                    params, opt_state, batch_d, keys)
-                chunk_losses = np.asarray(metrics["loss"]).tolist()
-            else:
-                chunk = 1
-                toks = jnp.asarray(pipeline.batch_at(step))
-                batch_d = _build_batch(cfg, toks, seq)
-                key = jax.random.fold_in(key_base, step)
-                params, opt_state, metrics = step_fn(params, opt_state,
-                                                     batch_d, key)
-                chunk_losses = [float(metrics["loss"])]
-            losses.extend(chunk_losses)
-            loss = chunk_losses[-1]
-            step += chunk
-            rep = watchdog.observe(step - 1, (time.time() - t0) / chunk)
-            if (step - chunk) % log_every == 0 or chunk > 1:
-                flag = " STRAGGLER" if rep.is_straggler else ""
-                print(f"[train {arch}] step {step - 1} loss {loss:.4f} "
-                      f"({rep.step_time * 1e3:.0f} ms/step){flag}",
+
+    # Per-step losses survive restarts: a step re-run after rolling back to
+    # the latest checkpoint just overwrites its own slot.
+    losses_by_step = {}
+    printed_policy = []
+
+    def make_state():
+        """(Re)build everything placement-dependent — called per attempt.
+
+        Fresh closures mean fresh jit caches, so after ``elastic.mark_lost``
+        the serial-vs-sharded tile-grid dispatch and the mesh placement
+        re-resolve against the *current* healthy pool at trace time; the
+        newest complete checkpoint (if any) is restored and re-placed."""
+        mesh, rules = build_mesh_and_rules(smoke, multi_pod)
+        _reject_mesh_grid_conflict(cfg, mesh)
+        if engine == "scan":
+            fn, _ = lm.make_scan_train_step(cfg, opt)
+        else:
+            fn, _ = lm.make_train_step(cfg, opt)
+        step_fn = jax.jit(fn, donate_argnums=(0, 1))
+
+        ctx = shd.use_sharding(mesh, rules) if mesh is not None else _null()
+        with ctx:
+            params, opt_state, axes = lm.init_train_state(
+                jax.random.key(seed), cfg, opt)
+            start = 0
+            if ckpt_dir:
+                latest = store.latest_step(ckpt_dir)
+                if latest is not None:
+                    shardings = (shd.tree_shardings(axes, mesh, rules,
+                                                    like=params)
+                                 if mesh is not None else None)
+                    (params, opt_state), meta = store.restore(
+                        ckpt_dir, latest, (params, opt_state),
+                        shardings=(shardings, None) if shardings else None)
+                    start = latest
+                    print(f"[train] restored step {latest}")
+            if analog:
+                from repro.analog.convert import reshard_analog
+                params = reshard_analog(params)
+                if not printed_policy:
+                    _print_policy_table(params)
+                    printed_policy.append(True)
+        return {"mesh": mesh, "rules": rules, "step_fn": step_fn,
+                "params": params, "opt_state": opt_state, "start": start,
+                "ckpt": store.AsyncCheckpointer(ckpt_dir)
+                if ckpt_dir else None}
+
+    def run(state):
+        mesh, rules = state["mesh"], state["rules"]
+        step_fn, ckpt = state["step_fn"], state["ckpt"]
+        params, opt_state = state["params"], state["opt_state"]
+        ctx = shd.use_sharding(mesh, rules) if mesh is not None else _null()
+        with ctx:
+            step = state["start"]
+            while step < steps:
+                t0 = time.time()
+                if engine == "scan":
+                    # Scanned chunk: one dispatch for up to ``scan_chunk``
+                    # steps, clipped so checkpoints land exactly on the
+                    # ``ckpt_every`` cadence and injected faults fire at
+                    # their exact step boundary.
+                    chunk = min(scan_chunk, steps - step)
+                    if ckpt and ckpt_every > 0:
+                        chunk = min(chunk, ckpt_every - (step % ckpt_every))
+                    if injector and step < injector.fault_step:
+                        chunk = min(chunk, injector.fault_step - step)
+                    toks = jnp.asarray(np.stack(
+                        [pipeline.batch_at(i)
+                         for i in range(step, step + chunk)]))
+                    batch_d = _build_batch(cfg, toks, seq)
+                    keys = engine_lib.fold_in_keys(
+                        key_base, jnp.arange(step, step + chunk))
+                    params, opt_state, metrics = step_fn(
+                        params, opt_state, batch_d, keys)
+                    chunk_losses = np.asarray(metrics["loss"]).tolist()
+                else:
+                    chunk = 1
+                    toks = jnp.asarray(pipeline.batch_at(step))
+                    batch_d = _build_batch(cfg, toks, seq)
+                    key = jax.random.fold_in(key_base, step)
+                    params, opt_state, metrics = step_fn(params, opt_state,
+                                                         batch_d, key)
+                    chunk_losses = [float(metrics["loss"])]
+                for i, v in enumerate(chunk_losses):
+                    losses_by_step[step + i] = v
+                loss = chunk_losses[-1]
+                step += chunk
+                rep = watchdog.observe(step - 1, (time.time() - t0) / chunk)
+                if (step - chunk) % log_every == 0 or chunk > 1:
+                    flag = " STRAGGLER" if rep.is_straggler else ""
+                    print(f"[train {arch}] step {step - 1} loss {loss:.4f} "
+                          f"({rep.step_time * 1e3:.0f} ms/step){flag}",
+                          flush=True)
+                if ckpt and (step % ckpt_every == 0
+                             or preempt.preemption_requested()
+                             or step == steps):
+                    ckpt.save(step, (params, opt_state),
+                              {"arch": arch, "loss": loss})
+                    if injector:
+                        injector.check(step, saving=True)
+                if injector:
+                    injector.check(step, flush=ckpt)
+                if preempt.preemption_requested():
+                    print("[train] preemption requested -> checkpointed, "
+                          "exiting")
+                    break
+            if ckpt:
+                ckpt.wait()
+
+    def on_restart(attempt, exc):
+        if isinstance(exc, DeviceLossError):
+            n = elastic.mark_lost(exc.n_lost)
+            print(f"[train] lost {exc.n_lost} device(s), {n} healthy -> "
+                  f"elastic restart {attempt}/{max_restarts}", flush=True)
+            for grid in _policy_tile_grids(cfg):
+                gp = elastic.grid_plan(n, grid)
+                print(f"[train] tile grid {grid[0]}x{grid[1]} -> "
+                      + ("sharded" if gp.sharded else "serial oracle"),
                       flush=True)
-            if ckpt and (step % ckpt_every == 0
-                         or preempt.preemption_requested()
-                         or step == steps):
-                ckpt.save(step, (params, opt_state),
-                          {"arch": arch, "loss": loss})
-            if preempt.preemption_requested():
-                print("[train] preemption requested -> checkpointed, exiting")
-                break
-        if ckpt:
-            ckpt.wait()
+        else:
+            print(f"[train] restart {attempt}/{max_restarts} after "
+                  f"{type(exc).__name__}: {exc}", flush=True)
+        # the surviving pool has a different steady-state step time; don't
+        # judge it against the pre-failure EWMA
+        watchdog.reset()
+
+    fault_lib.run_with_restarts(make_state, run, max_restarts=max_restarts,
+                                on_restart=on_restart)
+    losses = [losses_by_step[i] for i in sorted(losses_by_step)]
     return {"losses": losses, "final_loss": losses[-1] if losses else None}
 
 
@@ -293,6 +385,12 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--ckpt-dir", type=str, default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--max-restarts", type=int, default=0,
+                    help="restart-with-retry budget: on a failure (e.g. a "
+                         "simulated device loss) rebuild the step functions "
+                         "on the surviving healthy pool, restore the newest "
+                         "complete checkpoint and continue, up to this many "
+                         "times (see docs/scaling.md, fault tolerance)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--engine", choices=("scan", "python"), default="scan",
                     help="scan: fused multi-step dispatch; python: legacy "
@@ -334,7 +432,8 @@ def main():
                 multi_pod=args.multi_pod, lr=args.lr, engine=args.engine,
                 scan_chunk=args.scan_chunk, bm_mode=args.bm_mode,
                 use_pallas=args.use_pallas, tile_mesh=args.tile_mesh,
-                update_chunk=args.update_chunk)
+                update_chunk=args.update_chunk,
+                max_restarts=args.max_restarts)
     print(f"[train] done; final loss {res['final_loss']:.4f}")
 
 

@@ -68,7 +68,8 @@ def train(cfg: lenet.LeNetConfig, *, epochs: int = 15, batch: int = 8,
           n_train: int = 8192, n_test: int = 2048, seed: int = 0,
           log_path: Optional[str] = None, verbose: bool = True,
           eval_every_epoch: bool = True, engine: str = "scan",
-          data_parallel: bool = False, return_params: bool = False) -> Dict:
+          data_parallel: bool = False, return_params: bool = False,
+          ckpt_dir: Optional[str] = None, ckpt_every: int = 1) -> Dict:
     """Train per the paper's protocol; returns {test_error: [...], ...}.
 
     ``engine``: ``"scan"`` (fused epoch program, default) or ``"python"``
@@ -76,6 +77,15 @@ def train(cfg: lenet.LeNetConfig, *, epochs: int = 15, batch: int = 8,
     turns on the shard_map batch split (scan engine only).
     ``return_params`` adds the final params pytree under ``"params"``
     (not JSON-dumped) for parity testing.
+
+    ``ckpt_dir`` turns on async epoch-boundary checkpointing (every
+    ``ckpt_every`` epochs, plus the final epoch) *and* resume: a restarted
+    run restores the newest complete checkpoint and continues from the next
+    epoch.  Because every random draw is indexed absolutely — epoch shuffle
+    ``fold_in(k_data, epoch)``, step keys ``fold_in(k_train, epoch*spe+s)``,
+    eval ``fold_in(k_eval, epoch)`` — a resumed trajectory is bit-exact
+    against the uninterrupted run (tests/test_resume_parity.py kills this
+    driver with SIGKILL mid-run and pins exactly that).
     """
     if engine not in ("scan", "python"):
         raise ValueError(f"unknown engine {engine!r}")
@@ -92,6 +102,26 @@ def train(cfg: lenet.LeNetConfig, *, epochs: int = 15, batch: int = 8,
     opt_state = opt.init(params)
     evaluate = make_eval(cfg)
 
+    history: List[float] = []
+    start_epoch = 0
+    ckpt = injector = None
+    if ckpt_dir:
+        from repro.checkpoint import store
+        from repro.distributed.fault import FaultInjector
+        ckpt = store.AsyncCheckpointer(ckpt_dir)
+        injector = FaultInjector.from_env()
+        latest = store.latest_step(ckpt_dir)
+        if latest is not None:
+            (params, opt_state), meta = store.restore(
+                ckpt_dir, latest, (params, opt_state))
+            if cfg.mode == "analog":
+                from repro.analog.convert import reshard_analog
+                params = reshard_analog(params)
+            start_epoch = int(meta["epoch"])
+            history = list(meta.get("history", []))
+            if verbose:
+                print(f"[cnn] resumed after epoch {start_epoch}", flush=True)
+
     steps_per_epoch = len(xtr) // batch
     if engine == "scan":
         from repro.train import engine as eng
@@ -102,9 +132,10 @@ def train(cfg: lenet.LeNetConfig, *, epochs: int = 15, batch: int = 8,
     else:
         step, _ = make_train_step(cfg, opt)
 
-    history: List[float] = []
     t0 = time.time()
-    for epoch in range(epochs):
+    for epoch in range(start_epoch, epochs):
+        if injector is not None:
+            injector.check(epoch, flush=ckpt)
         if engine == "scan":
             params, opt_state = run_epoch(params, opt_state, xtr_d, ytr_d,
                                           k_data, k_train, epoch)
@@ -127,6 +158,16 @@ def train(cfg: lenet.LeNetConfig, *, epochs: int = 15, batch: int = 8,
                       flush=True)
             if log_path:
                 _dump(log_path, cfg, history, epochs, batch, n_train, seed)
+        if ckpt is not None and ((epoch + 1) % ckpt_every == 0
+                                 or epoch == epochs - 1):
+            # host snapshot happens on this thread, before the next epoch's
+            # dispatch donates (params, opt_state)
+            ckpt.save(epoch + 1, (params, opt_state),
+                      {"epoch": epoch + 1, "history": history})
+            if injector is not None:
+                injector.check(epoch, saving=True)
+    if ckpt is not None:
+        ckpt.wait()
     wallclock = time.time() - t0
     result = {
         "test_error": history,

@@ -121,26 +121,35 @@ def _reject_crossbar_mesh_conflict(cfg) -> None:
     """Fail fast when data-parallel shard_map and a *sharded* crossbar tile
     grid would claim the same devices.
 
-    ``data_parallel_grads`` spans ALL local devices with the 1-D 'data'
+    ``data_parallel_grads`` spans ALL healthy devices with the 1-D 'data'
     mesh; a tile grid that can place its 'array_row' x 'array_col' mesh
-    (``core/tile_grid.grid_is_sharded``) would nest a second shard_map over
-    the same devices inside the first — jax rejects the nested mesh, and
-    the composed placement would be wrong anyway.  Pick one: shard the
-    batch (grid falls back to its serial oracle) or shard the tiles.
+    would nest a second shard_map over the same devices inside the first.
+    The composition rules live in one place —
+    ``distributed.sharding.MeshPlan.validate`` — this check phrases each
+    offending layer's placement as a ``MeshPlan(data=<pool>, tile=<grid>)``
+    and surfaces the plan's verdict.  A grid the pool cannot hold composes
+    fine: it runs its bit-identical serial oracle on every data shard.
     """
     if getattr(cfg, "mode", None) != "analog" or not hasattr(
             cfg, "resolved"):
         return
-    from repro.core import tile_grid
+    from repro.distributed import elastic
+    from repro.distributed import sharding as shd
     from repro.models.lenet import LAYERS
-    resolved = {layer: cfg.resolved(layer) for layer in LAYERS}
-    offending = sorted(layer for layer, c in resolved.items()
-                       if c is not None and tile_grid.grid_is_sharded(c))
-    if offending:
+    n = elastic.n_healthy()
+    errors = []
+    for layer in LAYERS:
+        c = cfg.resolved(layer)
+        if c is None or getattr(c, "tile_grid", None) is None:
+            continue
+        try:
+            shd.MeshPlan(data=max(n, 1), tile=c.tile_grid).validate(n)
+        except ValueError as e:
+            errors.append(f"{layer}: {e}")
+    if errors:
         raise ValueError(
-            f"layers {offending} route through a sharded crossbar tile grid; "
-            "that mesh cannot nest inside the data-parallel 'data' mesh. "
-            "Disable data_parallel or drop tile_grid below the device count.")
+            "data-parallel shard_map cannot compose with sharded crossbar "
+            "tile grids:\n  " + "\n  ".join(errors))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,42 @@
+"""Property-test harness shared by the checkpoint/fault property suites.
+
+Uses Hypothesis to drive the example seeds when it is installed (shrinking,
+example database); the container image is not guaranteed to ship it, so the
+fallback is a deterministic sweep over the same seed space — the properties
+run either way, never silently skip.
+
+Tests take a single ``seed`` argument and derive all randomness from
+``np.random.default_rng(seed)``.
+"""
+
+# (no functools.wraps: the fallback wrapper must hide the seed arg)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:           # pragma: no cover - depends on the image
+    HAVE_HYPOTHESIS = False
+
+
+def seeded_property(n_examples: int = 40):
+    """Decorate ``test(seed: int)`` into a property over random seeds."""
+    if HAVE_HYPOTHESIS:
+        def deco(fn):
+            return settings(max_examples=n_examples, deadline=None)(
+                given(st.integers(min_value=0, max_value=2 ** 32 - 1))(fn))
+        return deco
+
+    def deco(fn):
+        def wrapper():
+            for seed in range(n_examples):
+                try:
+                    fn(seed)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"property failed for seed={seed}: {e}") from e
+        # keep the test's name/docstring but NOT its signature — pytest
+        # would otherwise look for a 'seed' fixture
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

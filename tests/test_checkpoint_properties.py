@@ -1,0 +1,147 @@
+"""Property tests for the checkpoint store.
+
+Two properties the kill-and-resume guarantees lean on:
+
+* **roundtrip identity**: ``restore(save(tree)) == tree`` byte-for-byte for
+  *arbitrary* pytrees — nested dicts/lists/tuples with mixed dtypes
+  (f32/f16/bf16/ints/bool), typed PRNG key leaves (single and batched),
+  zero-size and scalar arrays;
+* **latest_step robustness**: under randomly injected garbage (torn
+  ``.tmp`` partials, dirs with no/corrupt ``index.json``, missing leaf
+  files, malformed names) ``latest_step`` always reports the newest step
+  whose snapshot is actually complete — the step a killed run resumes from.
+
+Driven by Hypothesis when installed, else a deterministic seed sweep
+(tests/prop_harness.py).
+"""
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from prop_harness import seeded_property
+
+from repro.checkpoint import store
+
+_DTYPES = (jnp.float32, jnp.float16, jnp.bfloat16, jnp.int32, jnp.int8,
+           jnp.uint8, jnp.bool_)
+
+
+def _random_leaf(rng: np.random.Generator):
+    kind = rng.integers(0, 4)
+    if kind == 0:          # typed PRNG key (single or batched)
+        key = jax.random.key(int(rng.integers(0, 2 ** 31)))
+        if rng.integers(0, 2):
+            key = jax.random.split(key, int(rng.integers(1, 4)))
+        return key
+    dtype = _DTYPES[int(rng.integers(0, len(_DTYPES)))]
+    if kind == 1:          # scalar
+        shape = ()
+    else:                  # small nd array (possibly zero-size)
+        ndim = int(rng.integers(1, 4))
+        shape = tuple(int(rng.integers(0 if kind == 3 else 1, 5))
+                      for _ in range(ndim))
+    if dtype == jnp.bool_:
+        return jnp.asarray(rng.integers(0, 2, shape), jnp.bool_)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.asarray(rng.integers(-100, 100, shape), dtype)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def _random_tree(rng: np.random.Generator, depth: int = 0):
+    kind = rng.integers(0, 4) if depth < 3 else 3
+    if kind == 0:
+        return {f"k{i}": _random_tree(rng, depth + 1)
+                for i in range(rng.integers(1, 4))}
+    if kind == 1:
+        return [_random_tree(rng, depth + 1)
+                for _ in range(rng.integers(1, 3))]
+    if kind == 2:
+        return tuple(_random_tree(rng, depth + 1)
+                     for _ in range(rng.integers(1, 3)))
+    return _random_leaf(rng)
+
+
+def _leaf_bytes(leaf) -> bytes:
+    if str(leaf.dtype).startswith("key<"):
+        return np.asarray(jax.random.key_data(leaf)).tobytes()
+    arr = np.asarray(leaf)
+    if arr.dtype == jnp.bfloat16:
+        arr = arr.view(np.uint16)
+    return arr.tobytes()
+
+
+@seeded_property(n_examples=25)
+def test_roundtrip_is_identity(seed):
+    rng = np.random.default_rng(seed)
+    tree = _random_tree(rng)
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, 7, tree, {"seed": int(seed)})
+        restored, meta = store.restore(d, 7, tree)
+    assert meta["seed"] == int(seed)
+    orig = jax.tree_util.tree_leaves(tree)
+    back = jax.tree_util.tree_leaves(restored)
+    assert len(orig) == len(back)
+    for a, b in zip(orig, back):
+        assert a.dtype == b.dtype, (a.dtype, b.dtype)
+        assert a.shape == b.shape, (a.shape, b.shape)
+        assert _leaf_bytes(a) == _leaf_bytes(b)
+
+
+def _inject_garbage(rng: np.random.Generator, d: str, step: int):
+    """One random corruption; returns True if it invalidates ``step``."""
+    path = os.path.join(d, f"step_{step:010d}")
+    kind = int(rng.integers(0, 6))
+    if kind == 0:       # torn .tmp partial (killed save)
+        os.makedirs(path + ".tmp", exist_ok=True)
+        return False    # the final dir itself is untouched
+    if kind == 1:       # malformed name
+        os.makedirs(os.path.join(d, "step_garbage"), exist_ok=True)
+        return False
+    if kind == 2:       # dir without index.json
+        shutil.rmtree(path)
+        os.makedirs(path)
+        return True
+    if kind == 3:       # corrupt index.json
+        with open(os.path.join(path, "index.json"), "w") as f:
+            f.write("{not json")
+        return True
+    if kind == 4:       # missing leaf file
+        with open(os.path.join(path, "index.json")) as f:
+            idx = json.load(f)
+        if not idx["leaves"]:
+            return False
+        os.remove(os.path.join(path, idx["leaves"][0]["file"]))
+        return True
+    # index.json is a non-dict / wrong schema
+    with open(os.path.join(path, "index.json"), "w") as f:
+        json.dump([1, 2, 3], f)
+    return True
+
+
+@seeded_property(n_examples=25)
+def test_latest_step_under_injected_corruption(seed):
+    rng = np.random.default_rng(seed)
+    tree = {"w": jnp.arange(6, dtype=jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        steps = sorted(rng.choice(100, size=rng.integers(1, 6),
+                                  replace=False).tolist())
+        for s in steps:
+            store.save(d, int(s), tree)
+        intact = set(steps)
+        for s in rng.permutation(steps)[:rng.integers(0, len(steps) + 1)]:
+            if _inject_garbage(rng, d, int(s)):
+                intact.discard(int(s))
+        got = store.latest_step(d)
+    assert got == (max(intact) if intact else None), \
+        (got, sorted(intact), steps)
+
+
+def test_latest_step_empty_and_missing(tmp_path):
+    assert store.latest_step(str(tmp_path)) is None
+    assert store.latest_step(str(tmp_path / "nope")) is None

@@ -1,4 +1,5 @@
-"""Fault tolerance: watchdog, preemption, restart loop, elastic resize,
+"""Fault tolerance: watchdog, preemption, restart loop, elastic resize
+(+ the grid/nested-mesh placement policies and the fault injector),
 gradient compression."""
 
 import numpy as np
@@ -7,8 +8,13 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.elastic import resize_plan
-from repro.distributed.fault import (PreemptionHandler, StragglerWatchdog,
+from prop_harness import seeded_property
+
+from repro.distributed import elastic, fault
+from repro.distributed import sharding as shd
+from repro.distributed.elastic import grid_plan, resize_plan
+from repro.distributed.fault import (DeviceLossError, FaultInjector,
+                                     PreemptionHandler, StragglerWatchdog,
                                      run_with_restarts)
 from repro.optim.compression import (compress_gradients,
                                      decompress_gradients,
@@ -62,6 +68,34 @@ def test_run_with_restarts_gives_up():
         run_with_restarts(dict, run, max_restarts=2)
 
 
+def test_watchdog_trip_resets_consecutive_counter():
+    """After a trip fires, the consecutive counter restarts: the next trip
+    needs ``trip_after`` further slow steps, not one."""
+    trips = []
+    wd = StragglerWatchdog(threshold=2.0, trip_after=3,
+                           on_trip=trips.append)
+    for i in range(10):
+        wd.observe(i, 0.1)
+    for i in range(8):
+        wd.observe(10 + i, 0.5)
+    assert len(trips) == 2      # at the 3rd and 6th slow step, not 3..8
+
+
+def test_watchdog_reset_rebaselines_ewma():
+    """reset() (called after an elastic restart) forgets the timing
+    baseline: a post-restart steady state 5x slower must NOT be flagged."""
+    wd = StragglerWatchdog(threshold=2.0)
+    for i in range(20):
+        wd.observe(i, 0.1)
+    wd.reset()
+    rep = wd.observe(20, 0.5)
+    assert not rep.is_straggler and rep.ewma == 0.5
+    assert len(wd.reports) == 21    # history survives the reset
+    # and the new baseline is not poisoned by pre-restart numbers
+    rep = wd.observe(21, 0.5)
+    assert not rep.is_straggler
+
+
 def test_resize_plan():
     p = resize_plan(512, model_parallel=16)
     assert p.mesh_shape == (32, 16) and p.dropped == 0
@@ -73,6 +107,166 @@ def test_resize_plan():
     assert p.mesh_shape == (2, 9, 16) and p.n_devices == 288
     p = resize_plan(8, model_parallel=16)
     assert p.n_devices >= 1   # degrades TP rather than dying
+    with pytest.raises(ValueError):
+        resize_plan(0)
+    with pytest.raises(ValueError):
+        resize_plan(8, model_parallel=0)
+
+
+@seeded_property(n_examples=40)
+def test_resize_plan_properties(seed):
+    """Never over-plans, mesh shape is consistent, TP degree is preserved
+    whenever it fits, and the TP-degradation fallback terminates."""
+    rng = np.random.default_rng(seed)
+    mp = int(2 ** rng.integers(0, 7))
+    n = int(rng.integers(1, 700))
+    p = resize_plan(n, model_parallel=mp, multi_pod=bool(rng.integers(0, 2)))
+    assert p.n_devices <= n                       # never over-plans
+    assert p.n_devices >= 1                       # always places something
+    assert int(np.prod(p.mesh_shape)) == p.n_devices
+    assert p.dropped == n - p.n_devices
+    assert len(p.mesh_shape) == len(p.axis_names)
+    if n >= mp:
+        assert p.mesh_shape[-1] == mp             # TP preserved when it fits
+    else:
+        assert p.mesh_shape[-1] <= n              # degraded TP still fits
+
+
+@seeded_property(n_examples=40)
+def test_resize_plan_monotone_in_available_devices(seed):
+    rng = np.random.default_rng(seed)
+    mp = int(2 ** rng.integers(0, 6))
+    n = int(rng.integers(2, 600))
+    a = resize_plan(n - 1, model_parallel=mp)
+    b = resize_plan(n, model_parallel=mp)
+    assert b.n_devices >= a.n_devices
+
+
+@seeded_property(n_examples=40)
+def test_grid_plan_properties(seed):
+    """grid_plan decides *placement only*: the decomposition is untouched,
+    a sharded placement claims exactly one device per block and never more
+    than are available."""
+    rng = np.random.default_rng(seed)
+    grid = (int(rng.integers(1, 6)), int(rng.integers(1, 6)))
+    n = int(rng.integers(0, 40))
+    p = grid_plan(n, grid)
+    assert (p.grid_rows, p.grid_cols) == grid     # decomposition fixed
+    assert p.n_devices <= n
+    if p.sharded:
+        assert p.n_devices == p.n_blocks and p.n_blocks > 1
+    else:
+        assert p.n_devices == 0
+    assert p.sharded == (p.n_blocks > 1 and n >= p.n_blocks)
+
+
+def test_grid_plan_rejects_invalid_grid():
+    with pytest.raises(ValueError):
+        grid_plan(8, (0, 2))
+
+
+# --- healthy-device pool --------------------------------------------------
+
+def test_healthy_pool_mark_and_restore():
+    try:
+        all_devs = jax.devices()
+        assert elastic.n_healthy() == len(all_devs)
+        left = elastic.mark_lost(1)       # loses the LAST healthy device
+        assert left == len(all_devs) - 1
+        assert elastic.healthy_devices() == all_devs[:-1]
+        assert elastic.mark_lost(0) == left
+    finally:
+        elastic.restore_all()
+    assert elastic.n_healthy() == len(all_devs)
+
+
+def test_mark_lost_by_device_object():
+    try:
+        lost = jax.devices()[-1]
+        elastic.mark_lost([lost])
+        assert lost not in elastic.healthy_devices()
+    finally:
+        elastic.restore_all()
+
+
+# --- fault injector -------------------------------------------------------
+
+def test_fault_injector_device_loss_fires_once_at_step():
+    inj = FaultInjector("device_loss", fault_step=3, drop=2)
+    inj.check(0)
+    inj.check(2)                          # before the boundary: no-op
+    with pytest.raises(DeviceLossError) as ei:
+        inj.check(3)
+    assert ei.value.n_lost == 2
+    inj.check(5)                          # fires once, then inert
+
+
+def test_fault_injector_mid_save_requires_saving_flag():
+    inj = FaultInjector("sigkill_mid_save", fault_step=1)
+    inj.check(5, saving=False)            # would SIGKILL if it fired
+    assert not inj.fired
+
+
+def test_fault_injector_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        FaultInjector("power_surge", 0)
+
+
+def test_fault_injector_from_env_is_singleton(monkeypatch):
+    monkeypatch.setattr(fault, "_ENV_INJECTOR", None)
+    monkeypatch.delenv("REPRO_FAULT_MODE", raising=False)
+    assert FaultInjector.from_env() is None
+    monkeypatch.setenv("REPRO_FAULT_MODE", "device_loss")
+    monkeypatch.setenv("REPRO_FAULT_STEP", "4")
+    monkeypatch.setenv("REPRO_FAULT_DROP", "3")
+    inj = FaultInjector.from_env()
+    assert (inj.mode, inj.fault_step, inj.drop) == ("device_loss", 4, 3)
+    # an in-process restart re-reading the env gets the SAME (fired)
+    # injector — one configured fault per process
+    assert FaultInjector.from_env() is inj
+    monkeypatch.setattr(fault, "_ENV_INJECTOR", None)
+
+
+# --- nested mesh plan (composition conflict rules) ------------------------
+
+def test_mesh_plan_rejects_data_over_sharded_tile():
+    with pytest.raises(ValueError, match="data-parallel"):
+        shd.MeshPlan(data=4, tile=(2, 2)).validate(8)
+
+
+def test_mesh_plan_rejects_pipe_over_sharded_tile():
+    with pytest.raises(ValueError, match="pipeline"):
+        shd.MeshPlan(pipe=2, tile=(2, 2)).validate(8)
+
+
+def test_mesh_plan_serial_tile_composes():
+    """A grid the pool cannot hold runs its serial oracle and claims no
+    devices — it composes with data/pipe parallelism."""
+    plan = shd.MeshPlan(data=4, tile=(2, 4)).validate(4)
+    assert plan.placed_shape(4) == (1, 4, 1, 1)
+    assert plan.n_placed(4) == 4
+    shd.MeshPlan(pipe=2, data=2, tile=(8, 8)).validate(4)
+
+
+def test_mesh_plan_pipe_data_composes_and_counts_devices():
+    plan = shd.MeshPlan(pipe=2, data=4).validate(8)
+    assert plan.placed_shape(8) == (2, 4, 1, 1)
+    with pytest.raises(ValueError, match="needs 8 devices"):
+        shd.MeshPlan(pipe=2, data=4).validate(7)
+    with pytest.raises(ValueError, match=">= 1"):
+        shd.MeshPlan(pipe=0).validate(8)
+
+
+def test_mesh_plan_sharded_tile_alone_validates():
+    plan = shd.MeshPlan(tile=(2, 2)).validate(4)
+    assert plan.placed_shape(4) == (1, 1, 2, 2)
+
+
+def test_nested_mesh_single_device_build():
+    mesh = shd.nested_mesh()        # trivial plan on the real device pool
+    assert mesh.axis_names == shd.NESTED_AXES
+    assert mesh.shape == {"pipe": 1, "data": 1, "array_row": 1,
+                          "array_col": 1}
 
 
 # --- gradient compression ------------------------------------------------
