@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Static-analysis audit gate: trace named targets, diff against budgets.
+
+Traces the registered audit targets (``repro.analysis.targets``) on CPU,
+projects the stable invariants (launch counts, collective rounds, donation
+outcomes, hygiene counters) and diffs them against the checked-in budgets
+in ``analysis/budgets/``.  Any movement — regression OR improvement —
+exits 1; land intentional changes by refreshing the budget with
+``--update`` in the same PR so the contract diff shows up in review.
+
+Run:  PYTHONPATH=src python scripts/audit.py                    # gate all
+      PYTHONPATH=src python scripts/audit.py lenet              # one target
+      PYTHONPATH=src python scripts/audit.py --update           # refresh
+      PYTHONPATH=src python scripts/audit.py --report out.json  # artifact
+
+``--force-devices N`` (default 8) sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` BEFORE importing
+jax so the sharded tile-grid target can place its crossbar mesh on a CPU
+host; pass 0 to leave the environment alone.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def parse_args(argv):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("targets", nargs="*",
+                    help="target names (default: all registered)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the budget files from this trace")
+    ap.add_argument("--budget-dir", default=None,
+                    help="budget directory (default: <repo>/analysis/budgets)")
+    ap.add_argument("--report", default=None,
+                    help="write the full (unprojected) reports + diffs here")
+    ap.add_argument("--force-devices", type=int, default=8, metavar="N",
+                    help="force N host devices via XLA_FLAGS before "
+                         "importing jax (0 = leave environment alone)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered targets and exit")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv if argv is not None else sys.argv[1:])
+
+    if args.force_devices > 0:
+        flag = (f"--xla_force_host_platform_device_count="
+                f"{args.force_devices}")
+        prev = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in prev:
+            os.environ["XLA_FLAGS"] = f"{prev} {flag}".strip()
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    # import AFTER the environment is pinned: jax reads XLA_FLAGS at init
+    from repro.analysis import budgets
+    from repro.analysis.targets import TARGETS
+
+    if args.list:
+        for name in sorted(TARGETS):
+            print(name)
+        return 0
+
+    names = args.targets or sorted(TARGETS)
+    unknown = [n for n in names if n not in TARGETS]
+    if unknown:
+        print(f"unknown target(s): {', '.join(unknown)}; "
+              f"registered: {', '.join(sorted(TARGETS))}", file=sys.stderr)
+        return 2
+
+    bdir = args.budget_dir
+    artifact = {}
+    failed = False
+    for name in names:
+        if args.update:
+            out = TARGETS[name]()
+            path = budgets.save_budget(name, out, bdir)
+            print(f"[audit] {name}: budget written -> {path}")
+            artifact[name] = {"reports": out, "diffs": [],
+                              "budget": str(path)}
+            continue
+        out, diffs = budgets.check_target(name, bdir)
+        artifact[name] = {"reports": out, "diffs": diffs}
+        if diffs:
+            failed = True
+            print(f"[audit] {name}: BUDGET VIOLATION "
+                  f"({len(diffs)} mismatch(es))")
+            for d in diffs:
+                print(f"  {d}")
+        else:
+            progs = ", ".join(sorted(out))
+            print(f"[audit] {name}: ok ({progs})")
+
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print(f"[audit] report -> {args.report}")
+
+    if failed:
+        print("[audit] FAILED: invariants moved; if intentional, refresh "
+              "with scripts/audit.py --update and commit the budget diff",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,13 +1,24 @@
 #!/usr/bin/env python
-"""Docs link check: fail on dead *relative* links in README and docs/.
+"""Docs link check: dead relative links AND stale ``file:line`` code refs.
 
-Scans markdown files for inline links/images ``[text](target)`` and
-verifies that every relative target (optionally with a ``#fragment``)
-exists on disk.  External (``http(s)://``, ``mailto:``) and pure-anchor
-links are skipped.  Exit code 1 lists every dead link — wired into CI so
-renames/moves cannot silently strand the documentation.
+Two classes of rot, both CI-gated:
 
-Run:  python scripts/check_links.py [files/dirs ...]   (default: README.md docs)
+* markdown links/images ``[text](target)`` whose relative target no longer
+  exists on disk (external ``http(s)://``/``mailto:`` and pure-anchor
+  links are skipped);
+* backticked code references `` `path/to/file.py:123` `` — the convention
+  the docs use to point at specific lines — whose file is gone or is now
+  shorter than the referenced line.  Plain backticked paths without a line
+  number are checked for existence only when they look like repo paths
+  (contain a ``/`` and a known suffix).
+
+Relative links resolve against the markdown file's directory; code refs
+resolve against the repo root (that is how they are written in the docs).
+Fenced code blocks are dropped before scanning — command examples are not
+references.
+
+Run:  python scripts/check_links.py [files/dirs ...]
+      (default: README.md docs CHANGES.md ROADMAP.md)
 """
 
 from __future__ import annotations
@@ -19,6 +30,17 @@ import sys
 # inline markdown links, excluding images' alt brackets handled the same way
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 _SKIP = ("http://", "https://", "mailto:", "#")
+
+# `path/file.py:123` (line ref) and bare `path/file.py` repo-path mentions
+_CODE_REF = re.compile(r"`([\w][\w./\-]*\.(?:py|md|toml|yml|yaml|json))"
+                       r"(?::(\d+))?`")
+# run-time artifact dirs the docs legitimately name before they exist
+_GENERATED = ("results/",)
+_DEFAULT_ROOTS = ["README.md", "docs", "CHANGES.md", "ROADMAP.md"]
+
+
+def repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def md_files(paths):
@@ -32,12 +54,15 @@ def md_files(paths):
             yield p
 
 
+def _strip_fences(text: str) -> str:
+    # drop fenced code blocks: command examples are not links
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
 def dead_links(md_path: str):
     base = os.path.dirname(os.path.abspath(md_path))
     with open(md_path, encoding="utf-8") as f:
-        text = f.read()
-    # drop fenced code blocks: command examples are not links
-    text = re.sub(r"```.*?```", "", text, flags=re.S)
+        text = _strip_fences(f.read())
     for m in _LINK.finditer(text):
         target = m.group(1)
         if target.startswith(_SKIP):
@@ -46,24 +71,63 @@ def dead_links(md_path: str):
         if not path:
             continue
         if not os.path.exists(os.path.normpath(os.path.join(base, path))):
-            yield target
+            yield f"dead link ({target})"
+
+
+def _resolve_ref(path: str, root: str):
+    """First existing candidate for a doc code ref.
+
+    The docs write refs either repo-root-relative (``scripts/audit.py``,
+    ``docs/scaling.md``) or package-relative (``core/tile.py`` meaning
+    ``src/repro/core/tile.py``) — accept both spellings."""
+    for base in (root, os.path.join(root, "src"),
+                 os.path.join(root, "src", "repro")):
+        full = os.path.normpath(os.path.join(base, path))
+        if os.path.exists(full):
+            return full
+    return None
+
+
+def stale_code_refs(md_path: str, root: str):
+    """Backticked repo-path refs whose file or line no longer exists."""
+    with open(md_path, encoding="utf-8") as f:
+        text = _strip_fences(f.read())
+    for m in _CODE_REF.finditer(text):
+        path, line = m.group(1), m.group(2)
+        if "/" not in path:
+            continue                    # `engine.py`-style mention, not a ref
+        if path.startswith(_GENERATED):
+            continue                    # benchmark/run output, written later
+        full = _resolve_ref(path, root)
+        if full is None:
+            yield f"stale code ref `{m.group(0)[1:-1]}`: no such file"
+            continue
+        if line is not None:
+            with open(full, encoding="utf-8", errors="replace") as f:
+                n_lines = sum(1 for _ in f)
+            if int(line) > n_lines:
+                yield (f"stale code ref `{m.group(0)[1:-1]}`: file has "
+                       f"only {n_lines} lines")
 
 
 def main(argv):
-    roots = argv[1:] or ["README.md", "docs"]
+    roots = argv[1:] or [os.path.join(repo_root(), p)
+                         for p in _DEFAULT_ROOTS]
+    root = repo_root()
     bad = []
     n_files = 0
     for md in md_files(roots):
         n_files += 1
-        bad.extend((md, t) for t in dead_links(md))
+        bad.extend((md, p) for p in dead_links(md))
+        bad.extend((md, p) for p in stale_code_refs(md, root))
     if bad:
-        for md, target in bad:
-            print(f"DEAD LINK {md}: ({target})")
-        print(f"[check_links] {len(bad)} dead relative link(s) "
+        for md, problem in bad:
+            print(f"DEAD LINK {md}: {problem}")
+        print(f"[check_links] {len(bad)} dead link(s)/stale ref(s) "
               f"in {n_files} file(s)")
         return 1
     print(f"[check_links] OK — {n_files} markdown file(s), "
-          "no dead relative links")
+          "no dead links or stale code refs")
     return 0
 
 

@@ -94,7 +94,7 @@ def convert_to_analog(params: Params, axes: Optional[Params],
     :class:`AnalogState` (and axes mirrored); unmatched sites — and sites
     matched by an explicit ``digital`` rule — are returned untouched.
     """
-    key = jax.random.key(0) if key is None else key
+    key = jax.random.key(0) if key is None else key  # lint: fresh-key-ok
 
     def walk(p, a, path: Tuple[str, ...]):
         if isinstance(p, AnalogState) or not isinstance(p, dict):

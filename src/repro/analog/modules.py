@@ -191,7 +191,7 @@ class AnalogLinear:
                 "analog reads draw physical noise: pass a PRNG key (or use "
                 "repro.analog.convert.to_digital for key-free FP eval)")
         if key is None:
-            key = jax.random.key(0)   # digital path never consumes it
+            key = jax.random.key(0)   # digital; lint: fresh-key-ok
         return core_linear.apply(state.tile(), x, key, cfg, lr,
                                  bias=state.meta.bias, mode=mode)
 
@@ -266,7 +266,7 @@ class AnalogConv2d:
                 "analog reads draw physical noise: pass a PRNG key (or use "
                 "repro.analog.convert.to_digital for key-free FP eval)")
         if key is None:
-            key = jax.random.key(0)   # digital path never consumes it
+            key = jax.random.key(0)   # digital; lint: fresh-key-ok
         return core_conv.apply(state.tile(), x, key, cfg, lr,
                                kernel=spec.kernel, stride=spec.stride,
                                padding=padding, dilation=spec.dilation,

@@ -1,0 +1,21 @@
+"""Static program analysis: jaxpr/HLO invariant audits and CI budgets.
+
+Layers:
+
+* :mod:`repro.analysis.hlo` — text-level HLO parsing (launch multipliers,
+  collective bytes, donation aliases), promoted from ``launch/hlo_analysis``;
+* :mod:`repro.analysis.jaxpr_audit` — traced-jaxpr walker (launch counts by
+  stable kind, collective rounds per loop iteration, donation verification,
+  PRNG/dtype hygiene);
+* :mod:`repro.analysis.targets` — named audit targets (LeNet scan step,
+  tile-grid streaming update, LM smoke step, serve decode);
+* :mod:`repro.analysis.budgets` — checked-in budget JSONs + diffing, the CI
+  gate behind ``scripts/audit.py``;
+* :mod:`repro.analysis.source_lint` — AST lint for library-code hygiene
+  (host time, numpy RNG, fresh keys, host syncs in jit-reachable code).
+"""
+
+from repro.analysis import hlo  # noqa: F401
+from repro.analysis.jaxpr_audit import (  # noqa: F401
+    DonationReport, JaxprReport, LoopInfo, audit_donation, audit_fn,
+    audit_jaxpr, snapshot_hazards, split_launch_name)

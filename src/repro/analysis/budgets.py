@@ -1,0 +1,108 @@
+"""Checked-in invariant budgets and the CI diff gate.
+
+A budget file (``analysis/budgets/<target>.json`` at the repo root) pins,
+for every program of one audit target, the *stable projection* of its
+:class:`~repro.analysis.jaxpr_audit.JaxprReport`: launch counts by kernel
+name, collective counts and per-loop rounds, donation outcomes, and the
+hygiene counters.  Unstable detail (key-reuse messages carry trace-local
+variable ids) stays out of the budget — the counts are pinned, the prose
+is for humans in the report artifact.
+
+The gate is an exact diff, both directions: a regression (an extra launch,
+a new collective round, a declined donation) fails CI, and an improvement
+fails too — improvements are real contract changes and must be landed by
+refreshing the budget (``scripts/audit.py --update``) in the same PR, so
+the diff shows up in review.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Dict, List, Optional, Tuple
+
+# Report keys that are deterministic across traces and worth pinning.
+STABLE_KEYS = (
+    "launches", "launches_by_kind", "launch_total",
+    "managed_read_launches", "collectives", "collective_total",
+    "loops", "max_collective_rounds_per_loop_iter",
+    "key_reuse_count", "f64_ops", "weak_launch_inputs",
+    "has_unbounded_loops",
+)
+DONATION_KEYS = ("requested", "honored", "declined", "ok")
+
+
+def default_budget_dir() -> pathlib.Path:
+    """``<repo>/analysis/budgets`` resolved from this file's location."""
+    return pathlib.Path(__file__).resolve().parents[3] / "analysis/budgets"
+
+
+def project(target_out: Dict[str, Any]) -> Dict[str, Any]:
+    """The stable, pinnable projection of one target's program reports."""
+    out: Dict[str, Any] = {}
+    for prog, rep in sorted(target_out.items()):
+        keys = DONATION_KEYS if prog.startswith("donation") else STABLE_KEYS
+        out[prog] = {k: rep[k] for k in keys if k in rep}
+    return out
+
+
+def budget_path(name: str,
+                budget_dir: Optional[pathlib.Path] = None) -> pathlib.Path:
+    d = pathlib.Path(budget_dir) if budget_dir else default_budget_dir()
+    return d / f"{name}.json"
+
+
+def load_budget(name: str, budget_dir: Optional[pathlib.Path] = None
+                ) -> Optional[Dict[str, Any]]:
+    p = budget_path(name, budget_dir)
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def save_budget(name: str, target_out: Dict[str, Any],
+                budget_dir: Optional[pathlib.Path] = None) -> pathlib.Path:
+    p = budget_path(name, budget_dir)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(project(target_out), indent=2, sort_keys=True)
+                 + "\n")
+    return p
+
+
+def _diff_value(path: str, exp: Any, act: Any, out: List[str]) -> None:
+    if isinstance(exp, dict) and isinstance(act, dict):
+        for k in sorted(set(exp) | set(act)):
+            _diff_value(f"{path}.{k}", exp.get(k), act.get(k), out)
+    elif isinstance(exp, list) and isinstance(act, list):
+        if len(exp) != len(act):
+            out.append(f"{path}: length {len(exp)} -> {len(act)}")
+        for i, (e, a) in enumerate(zip(exp, act)):
+            _diff_value(f"{path}[{i}]", e, a, out)
+    elif exp != act:
+        out.append(f"{path}: {exp!r} -> {act!r}")
+
+
+def diff(expected: Dict[str, Any], actual_projection: Dict[str, Any]
+         ) -> List[str]:
+    """Human-readable mismatches, ``budget -> traced``; empty == green."""
+    out: List[str] = []
+    _diff_value("", expected, actual_projection, out)
+    return [d.lstrip(".") for d in out]
+
+
+def check_target(name: str, budget_dir: Optional[pathlib.Path] = None
+                 ) -> Tuple[Dict[str, Any], List[str]]:
+    """Trace one named target and diff it against its checked-in budget.
+
+    Returns ``(full_report, failures)`` — ``failures`` non-empty when the
+    budget is missing or any pinned metric moved.
+    """
+    from repro.analysis.targets import TARGETS
+
+    target_out = TARGETS[name]()
+    budget = load_budget(name, budget_dir)
+    if budget is None:
+        return target_out, [
+            f"no budget checked in at {budget_path(name, budget_dir)}; "
+            f"create it with: scripts/audit.py --update {name}"]
+    return target_out, diff(budget, project(target_out))

@@ -1,0 +1,556 @@
+"""Static audit of traced jaxprs: launches, collectives, donation, hygiene.
+
+The paper's architecture argument (and this repo's performance story) is
+*structural*: every analog cycle must stay O(1) array operations — one
+fused managed read per MVM (PR 2), one psum per chunk round on the sharded
+grid (PR 4), donated carries that are actually reused in place (PR 1/5).
+None of that needs a training step to run: it is all visible in the jaxpr
+``jax.make_jaxpr`` produces from abstract (``eval_shape``-style) inputs.
+
+This module walks a (closed) jaxpr recursively — through ``pjit``, ``scan``
+(trip-count multiplied), ``while`` (unknown trips: counted once per round
+and flagged), ``cond`` (per-name max over branches), ``shard_map``, custom
+derivative calls — and reports:
+
+* **launches** — ``pallas_call`` equations, keyed by the stable kernel kind
+  names :mod:`repro.kernels.ops` stamps on every launch
+  (``managed_read``, ``managed_read_conv``, ``noisy_read``,
+  ``pulse_update``, ``pulse_counts``) plus any trace-time
+  ``ops.launch_label`` suffix (``managed_read[K2]``);
+* **collectives** — ``psum``/``all_gather``/… equations with trip
+  multipliers, and per-loop-body *rounds*: the longest dependency chain of
+  collectives inside one loop iteration.  "One psum per chunk round" is
+  ``collective_rounds_per_iter == 1`` on the chunk loop;
+* **donation** — :func:`audit_donation` compiles a donated step and diffs
+  the requested donations against the ``input_output_alias`` map XLA
+  actually honored (silently declined donations are the difference), and
+  :func:`snapshot_hazards` flags device-array leaves inside a tree that is
+  about to cross a thread boundary (the PR-5 ``AsyncCheckpointer``
+  use-after-donation crash class);
+* **PRNG / dtype hygiene** — a key consumed by two random ops without an
+  intervening ``fold_in``/``split`` (identical noise on both consumers),
+  any float64 value in the program, and weak-typed inputs reaching a
+  launch (dtype drift into tile arrays).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.analysis import hlo as hlo_lib
+
+# Primitives that perform cross-device communication in traced programs.
+COLLECTIVE_PRIMS = frozenset({
+    "psum", "pmax", "pmin", "ppermute", "pbroadcast", "all_gather",
+    "all_to_all", "psum_scatter", "reduce_scatter", "pgather",
+})
+
+# Primitives that *consume* PRNG randomness: two consumers of the same key
+# variable draw identical bits.  Deriving primitives (fold_in, split, wrap,
+# clone) create fresh keys and are exempt.
+KEY_CONSUMING_PRIMS = frozenset({"random_bits", "random_unwrap"})
+
+def split_launch_name(name: str) -> Tuple[str, str]:
+    """``"managed_read__K2" -> ("managed_read", "K2")``.
+
+    ``__`` is the kind/label separator :func:`repro.kernels.ops.launch_name`
+    uses (pallas mangles brackets in kernel names); kind names themselves
+    never contain a double underscore.
+    """
+    kind, _, label = name.partition("__")
+    return kind, label
+
+
+@dataclasses.dataclass
+class LoopInfo:
+    """Per-iteration statistics of one loop body (nested loops excluded)."""
+    kind: str                          # 'scan' | 'while'
+    path: str                          # nesting path, e.g. 'scan/while'
+    length: Optional[int]              # static trip count; None for while
+    launches_per_iter: Dict[str, int]
+    collectives_per_iter: int
+    collective_rounds_per_iter: int
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class JaxprReport:
+    """Everything the budget layer pins about one traced program."""
+    launches: Dict[str, int]           # full launch name -> total count
+    collectives: Dict[str, int]        # collective prim -> total count
+    loops: List[LoopInfo]
+    key_reuse: List[str]
+    f64_ops: int
+    weak_launch_inputs: int
+    has_unbounded_loops: bool
+
+    # --- aggregations ------------------------------------------------------
+    @property
+    def launch_total(self) -> int:
+        return sum(self.launches.values())
+
+    @property
+    def collective_total(self) -> int:
+        return sum(self.collectives.values())
+
+    @property
+    def launches_by_kind(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for name, n in self.launches.items():
+            kind, _ = split_launch_name(name)
+            out[kind] = out.get(kind, 0) + n
+        return out
+
+    @property
+    def managed_read_launches(self) -> int:
+        """Launches of any managed-read kind (dense or fused conv)."""
+        return sum(n for k, n in self.launches_by_kind.items()
+                   if k.startswith("managed_read"))
+
+    @property
+    def max_collective_rounds_per_loop_iter(self) -> int:
+        return max((lp.collective_rounds_per_iter for lp in self.loops),
+                   default=0)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "launches": dict(sorted(self.launches.items())),
+            "launches_by_kind": dict(sorted(self.launches_by_kind.items())),
+            "launch_total": self.launch_total,
+            "managed_read_launches": self.managed_read_launches,
+            "collectives": dict(sorted(self.collectives.items())),
+            "collective_total": self.collective_total,
+            "loops": [lp.to_json() for lp in self.loops],
+            "max_collective_rounds_per_loop_iter":
+                self.max_collective_rounds_per_loop_iter,
+            "key_reuse": list(self.key_reuse),
+            "key_reuse_count": len(self.key_reuse),
+            "f64_ops": self.f64_ops,
+            "weak_launch_inputs": self.weak_launch_inputs,
+            "has_unbounded_loops": self.has_unbounded_loops,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr walking
+# ---------------------------------------------------------------------------
+
+def _as_jaxpr(obj) -> Optional[Any]:
+    """A Jaxpr from a param value (Jaxpr or ClosedJaxpr), else None."""
+    if hasattr(obj, "eqns") and hasattr(obj, "invars"):
+        return obj
+    inner = getattr(obj, "jaxpr", None)
+    if inner is not None and hasattr(inner, "eqns"):
+        return inner
+    return None
+
+
+def _sub_jaxprs(eqn) -> List[Tuple[str, Any]]:
+    """Every jaxpr-valued param of an equation (branches unrolled)."""
+    out: List[Tuple[str, Any]] = []
+    for k, v in eqn.params.items():
+        vals = v if isinstance(v, (list, tuple)) else (v,)
+        for i, item in enumerate(vals):
+            j = _as_jaxpr(item)
+            if j is not None:
+                out.append((f"{k}[{i}]" if isinstance(v, (list, tuple))
+                            else k, j))
+    return out
+
+
+def _is_key_aval(aval) -> bool:
+    dt = getattr(aval, "dtype", None)
+    return dt is not None and jax.dtypes.issubdtype(dt, jax.dtypes.prng_key)
+
+
+class _Acc:
+    """Mutable accumulator threaded through the walk."""
+
+    def __init__(self) -> None:
+        self.launches: Dict[str, int] = {}
+        self.collectives: Dict[str, int] = {}
+        self.loops: List[LoopInfo] = []
+        # canonical key var id -> [consumption count, var repr, contexts]
+        self.key_uses: Dict[int, List[Any]] = {}
+        # canonical key var id -> loop multiplier at its creation scope: a
+        # key minted inside a scan body is fresh every iteration, so its
+        # consumptions are weighted relative to where it was born, while a
+        # loop-invariant key closed over from outside gets the full trip
+        # multiplier (same bits every iteration = reuse)
+        self.root_mult: Dict[int, int] = {}
+        self.f64_ops = 0
+        self.weak_launch_inputs = 0
+        self.has_unbounded_loops = False
+
+    def add_launch(self, name: str, mult: int) -> None:
+        self.launches[name] = self.launches.get(name, 0) + mult
+
+    def add_collective(self, prim: str, mult: int) -> None:
+        self.collectives[prim] = self.collectives.get(prim, 0) + mult
+
+    def add_key_use(self, root, mult: int, context: str) -> None:
+        entry = self.key_uses.setdefault(id(root), [0, str(root), []])
+        entry[0] += mult
+        entry[2].append(context)
+
+    def key_reuse_findings(self) -> List[str]:
+        out = []
+        for _rid, (count, name, contexts) in sorted(self.key_uses.items()):
+            if count > 1:
+                out.append(
+                    f"key {name} consumed {count}x without fold_in/split "
+                    f"({'; '.join(sorted(set(contexts)))})")
+        return out
+
+
+def _launch_eqn_name(eqn) -> str:
+    nsi = eqn.params.get("name_and_src_info")
+    name = getattr(nsi, "name", None)
+    if name:
+        return str(name)
+    return str(eqn.params.get("name", "pallas"))
+
+
+def _local_stats(jaxpr, _cache: Optional[Dict[int, Any]] = None
+                 ) -> Tuple[Dict[str, int], int, int]:
+    """(launches, collective count, collective rounds) of one loop body.
+
+    Recurses through non-loop sub-jaxprs (``pjit``/``shard_map``/custom
+    derivative calls — they execute inline as part of one iteration) but
+    treats nested ``scan``/``while`` bodies as opaque: those are reported
+    as their own :class:`LoopInfo` entries.  ``cond`` branches are summed
+    (a conservative overcount of the single executed path).
+
+    *Rounds* is the longest chain of collectives connected by data
+    dependence: independent collectives (e.g. the y-psum and the
+    saturation-flag psum of one sharded read) can run in one communication
+    round, while the second read of a two-phase BM retry must wait for the
+    first read's psum — that is a second round.  A composite equation
+    (e.g. a pjit whose body psums) contributes its internal round count to
+    every chain passing through it.
+    """
+    if _cache is None:
+        _cache = {}
+    if id(jaxpr) in _cache:
+        return _cache[id(jaxpr)]
+    launches: Dict[str, int] = {}
+    ncoll = 0
+    producer: Dict[Any, Any] = {}
+    own_rounds: Dict[int, int] = {}
+    for eqn in jaxpr.eqns:
+        for ov in eqn.outvars:
+            producer[ov] = eqn
+        prim = eqn.primitive.name
+        if prim == "pallas_call":
+            nm = _launch_eqn_name(eqn)
+            launches[nm] = launches.get(nm, 0) + 1
+            own_rounds[id(eqn)] = 0
+        elif prim in COLLECTIVE_PRIMS:
+            ncoll += 1
+            own_rounds[id(eqn)] = 1
+        elif prim in ("scan", "while"):
+            own_rounds[id(eqn)] = 0        # opaque: its own LoopInfo
+        else:
+            r = 0
+            for _, sj in _sub_jaxprs(eqn):
+                sl, sc, sr = _local_stats(sj, _cache)
+                ncoll += sc
+                for k, v in sl.items():
+                    launches[k] = launches.get(k, 0) + v
+                r = max(r, sr)
+            own_rounds[id(eqn)] = r
+
+    # memoized DFS over the producer graph; recursion depth is bounded by
+    # the body's dependency-chain length, so raise the limit for long
+    # straight-line bodies
+    import sys
+    memo: Dict[int, int] = {}
+
+    def chain(eqn) -> int:
+        key = id(eqn)
+        if key in memo:
+            return memo[key]
+        memo[key] = 0
+        best = 0
+        for iv in eqn.invars:
+            if hasattr(iv, "val"):         # Literal: no producer
+                continue
+            p = producer.get(iv)
+            if p is not None:
+                c = chain(p)
+                if c > best:
+                    best = c
+        memo[key] = best + own_rounds.get(key, 0)
+        return memo[key]
+
+    old_limit = sys.getrecursionlimit()
+    sys.setrecursionlimit(max(old_limit, 10000))
+    try:
+        rounds = 0
+        for eqn in jaxpr.eqns:
+            if own_rounds.get(id(eqn), 0) > 0:
+                rounds = max(rounds, chain(eqn))
+    finally:
+        sys.setrecursionlimit(old_limit)
+    _cache[id(jaxpr)] = (launches, ncoll, rounds)
+    return launches, ncoll, rounds
+
+
+def _resolve(env: Dict[int, Any], v):
+    return env.get(id(v), v)
+
+
+def _alias(env: Dict[int, Any], sub_invars, parent_vars) -> Dict[int, Any]:
+    """Extend the canonical-var environment: a sub-jaxpr invar stands for
+    the parent-scope value bound to it (Literals skipped).  This is what
+    lets a key threaded through ``pjit``/``scan``-const boundaries keep one
+    identity, so two ``random_bits`` of the same user key are seen as reuse
+    even though each sits in its own call sub-jaxpr."""
+    new = dict(env)
+    for sv, pv in zip(sub_invars, parent_vars):
+        if hasattr(pv, "aval"):                 # Vars only, not Literals
+            new[id(sv)] = _resolve(env, pv)
+    return new
+
+
+def _walk(jaxpr, acc: _Acc, mult: int, path: str,
+          env: Dict[int, Any]) -> None:
+    for v in list(jaxpr.invars) + list(jaxpr.constvars):
+        if hasattr(v, "aval") and _is_key_aval(v.aval):
+            acc.root_mult.setdefault(id(_resolve(env, v)), mult)
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        for ov in eqn.outvars:
+            dt = getattr(getattr(ov, "aval", None), "dtype", None)
+            if dt is not None and str(dt) == "float64":
+                acc.f64_ops += 1
+            if hasattr(ov, "aval") and _is_key_aval(ov.aval):
+                acc.root_mult.setdefault(id(ov), mult)
+        if prim in KEY_CONSUMING_PRIMS:
+            for iv in eqn.invars:
+                if hasattr(iv, "aval") and _is_key_aval(iv.aval):
+                    root = _resolve(env, iv)
+                    born = acc.root_mult.get(id(root), mult)
+                    acc.add_key_use(root, max(1, mult // max(born, 1)),
+                                    f"{path or 'top'}:{prim}")
+            continue
+        if prim == "pallas_call":
+            acc.add_launch(_launch_eqn_name(eqn), mult)
+            for iv in eqn.invars:
+                av = getattr(iv, "aval", None)
+                if av is not None and getattr(av, "weak_type", False):
+                    acc.weak_launch_inputs += 1
+            continue                  # kernel-internal ops are one launch
+        if prim in COLLECTIVE_PRIMS:
+            acc.add_collective(prim, mult)
+            continue
+        if prim == "scan":
+            length = int(eqn.params.get("length", 1))
+            nconsts = int(eqn.params.get("num_consts", 0))
+            body = _as_jaxpr(eqn.params.get("jaxpr"))
+            if body is not None:
+                launches, ncoll, rounds = _local_stats(body)
+                acc.loops.append(LoopInfo(
+                    kind="scan", path=_join(path, "scan"), length=length,
+                    launches_per_iter=launches, collectives_per_iter=ncoll,
+                    collective_rounds_per_iter=rounds))
+                # loop-invariant consts keep their outer identity: a key
+                # closed over and consumed in the body draws the SAME bits
+                # every iteration — trip-multiplied consumption flags it
+                benv = _alias(env, body.invars[:nconsts],
+                              eqn.invars[:nconsts])
+                _walk(body, acc, mult * length, _join(path, "scan"), benv)
+            continue
+        if prim == "while":
+            acc.has_unbounded_loops = True
+            cn = int(eqn.params.get("cond_nconsts", 0))
+            bn = int(eqn.params.get("body_nconsts", 0))
+            body = _as_jaxpr(eqn.params.get("body_jaxpr"))
+            cond = _as_jaxpr(eqn.params.get("cond_jaxpr"))
+            if body is not None:
+                launches, ncoll, rounds = _local_stats(body)
+                acc.loops.append(LoopInfo(
+                    kind="while", path=_join(path, "while"), length=None,
+                    launches_per_iter=launches, collectives_per_iter=ncoll,
+                    collective_rounds_per_iter=rounds))
+                # unknown trip count: charge one round toward totals
+                benv = _alias(env, body.invars[:bn],
+                              eqn.invars[cn:cn + bn])
+                _walk(body, acc, mult, _join(path, "while"), benv)
+            if cond is not None:
+                cenv = _alias(env, cond.invars[:cn], eqn.invars[:cn])
+                _walk(cond, acc, mult, _join(path, "while.cond"), cenv)
+            continue
+        if prim == "cond":
+            # exactly one branch executes: merge by per-name max
+            branch_accs = []
+            for _k, bj in _sub_jaxprs(eqn):
+                sub = _Acc()
+                sub.root_mult = acc.root_mult    # shared creation registry
+                benv = _alias(env, bj.invars, eqn.invars[1:])
+                _walk(bj, sub, mult, _join(path, "cond"), benv)
+                branch_accs.append(sub)
+            _merge_branches(acc, branch_accs)
+            continue
+        for _k, sj in _sub_jaxprs(eqn):
+            senv = (_alias(env, sj.invars, eqn.invars)
+                    if len(sj.invars) == len(eqn.invars) else env)
+            _walk(sj, acc, mult, path, senv)
+
+
+def _join(path: str, part: str) -> str:
+    return f"{path}/{part}" if path else part
+
+
+def _merge_branches(acc: _Acc, branches: List[_Acc]) -> None:
+    names = set()
+    for b in branches:
+        names.update(b.launches)
+    for nm in names:
+        acc.launches[nm] = acc.launches.get(nm, 0) + max(
+            b.launches.get(nm, 0) for b in branches)
+    prims = set()
+    for b in branches:
+        prims.update(b.collectives)
+    for p in prims:
+        acc.collectives[p] = acc.collectives.get(p, 0) + max(
+            b.collectives.get(p, 0) for b in branches)
+    # key consumption: branches are exclusive, so the same root consumed
+    # once in each branch is NOT reuse — charge the per-branch max
+    merged: Dict[int, List[Any]] = {}
+    for b in branches:
+        for rid, (cnt, name, ctxs) in b.key_uses.items():
+            cur = merged.setdefault(rid, [0, name, []])
+            cur[0] = max(cur[0], cnt)
+            cur[2].extend(ctxs)
+    for rid, (cnt, name, ctxs) in merged.items():
+        entry = acc.key_uses.setdefault(rid, [0, name, []])
+        entry[0] += cnt
+        entry[2].extend(ctxs)
+    for b in branches:
+        acc.loops.extend(b.loops)
+        acc.f64_ops += b.f64_ops
+        acc.weak_launch_inputs += b.weak_launch_inputs
+        acc.has_unbounded_loops |= b.has_unbounded_loops
+
+
+def audit_jaxpr(closed_jaxpr) -> JaxprReport:
+    """Audit an already-traced (closed) jaxpr."""
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    acc = _Acc()
+    _walk(jaxpr, acc, 1, "", {})
+    return JaxprReport(
+        launches=acc.launches, collectives=acc.collectives, loops=acc.loops,
+        key_reuse=acc.key_reuse_findings(), f64_ops=acc.f64_ops,
+        weak_launch_inputs=acc.weak_launch_inputs,
+        has_unbounded_loops=acc.has_unbounded_loops)
+
+
+def audit_fn(fn: Callable, *args, **kwargs) -> JaxprReport:
+    """Trace ``fn`` abstractly (args may be ShapeDtypeStructs) and audit."""
+    jx = jax.make_jaxpr(fn)(*args, **kwargs)
+    return audit_jaxpr(jx)
+
+
+# ---------------------------------------------------------------------------
+# Donation verification
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DonationReport:
+    """Requested vs honored buffer donations of one compiled program."""
+    requested: int                    # donated input buffers requested
+    honored: int                      # aliased by XLA (input_output_alias)
+    declined: List[str]               # leaf paths XLA silently declined
+    lowering_warnings: List[str]      # jax "donated buffers not usable"
+
+    @property
+    def ok(self) -> bool:
+        return not self.declined
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self) | {"ok": self.ok}
+
+
+def _leaf_paths(tree) -> List[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, _leaf in flat:
+        out.append("/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path) or "<leaf>")
+    return out
+
+
+def audit_donation(fn: Callable, args: Tuple, donate_argnums: Tuple[int, ...]
+                   ) -> DonationReport:
+    """Compile ``fn(*args)`` with the given donations and diff request vs
+    reality.
+
+    ``args`` may be ShapeDtypeStructs (nothing is executed).  XLA declines
+    a donation silently when no output shares the buffer's shape/dtype —
+    the PR-1 epoch carries and PR-5 checkpoint carries both rely on
+    donations actually landing, so the audit surfaces the difference
+    structurally instead of waiting for the memory regression.
+    """
+    donate_argnums = tuple(donate_argnums)
+    # keep_unused pins the HLO parameter order to the flat leaf order, so
+    # alias indices map back to leaves exactly.
+    jitted = jax.jit(fn, donate_argnums=donate_argnums, keep_unused=True)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        compiled = jitted.lower(*args).compile()
+    lw = [str(w.message) for w in caught
+          if "donated" in str(w.message).lower()]
+    aliases = hlo_lib.input_output_aliases(compiled.as_text())
+
+    # flat parameter index ranges of each donated argnum
+    sizes = [len(jax.tree_util.tree_leaves(a)) for a in args]
+    starts = [sum(sizes[:i]) for i in range(len(args))]
+    declined: List[str] = []
+    requested = 0
+    honored = 0
+    for i in donate_argnums:
+        paths = _leaf_paths(args[i])
+        for j, p in enumerate(paths):
+            # non-donatable leaves (scalars jax keeps by value, int paths)
+            # still count as requested: XLA's view is authoritative
+            idx = starts[i] + j
+            requested += 1
+            if idx in aliases:
+                honored += 1
+            else:
+                declined.append(f"arg{i}/{p}")
+    return DonationReport(requested=requested, honored=honored,
+                          declined=declined, lowering_warnings=lw)
+
+
+def snapshot_hazards(tree) -> List[str]:
+    """Leaf paths of a host snapshot that still reference device buffers.
+
+    A tree captured for a background thread (``AsyncCheckpointer``) while
+    its source carry is donated must be fully host-materialized; any
+    ``jax.Array`` leaf left inside races with the next step's donation
+    deleting the buffer — the exact PR-5 "Array has been deleted" crash.
+    NumPy arrays, scalars and host-side snapshot carriers (e.g.
+    ``checkpoint.store._HostKeyData``) are safe.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, jax.Array))
+    bad = []
+    for path, leaf in flat:
+        if isinstance(leaf, jax.Array):
+            p = "/".join(str(getattr(pp, "key", getattr(pp, "idx", pp)))
+                         for pp in path) or "<leaf>"
+            bad.append(p)
+    return bad
+
+
+def report_to_json_str(report: JaxprReport) -> str:
+    return json.dumps(report.to_json(), indent=2, sort_keys=True)

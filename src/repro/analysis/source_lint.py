@@ -1,0 +1,193 @@
+"""AST hygiene lint for library code under ``src/repro``.
+
+The runtime invariants the jaxpr auditor pins (stable PRNG schedules,
+reproducible traces, no host round-trips inside jitted programs) are easy
+to break one line at a time; this lint catches the source patterns before
+they reach a trace:
+
+* ``host-time`` — ``time.time()``/``perf_counter()``/``datetime.now()``
+  in library code: host clocks inside jit-reachable code either bake the
+  trace-time value into the compiled program or force a host sync.
+* ``np-random`` — ``np.random.*``: numpy's global RNG is untraceable,
+  unseeded-by-default state that silently decouples from the jax key
+  schedule (library randomness goes through ``jax.random`` keys or
+  ``utils.fastrng`` counters).
+* ``fresh-key`` — ``jax.random.key(<literal>)`` / ``PRNGKey(<literal>)``:
+  a constant-seed key minted inside library code correlates across every
+  call site; keys come from the caller (the engines derive them with
+  ``fold_in`` — see ``train.engine.fold_in_keys``).
+* ``host-sync`` — ``.block_until_ready()`` / ``jax.device_get`` /
+  ``.item()``: device syncs in jit-reachable code stall the dispatch
+  pipeline (drivers under ``launch/`` may sync; library code may not).
+
+Driver/host-side trees (``launch/``, ``data/``) are exempt from the
+host-oriented rules by default.  Individual legitimate lines carry a
+pragma: ``# lint: host-ok`` (any rule), or ``# lint: <rule>-ok``.
+
+Run:  PYTHONPATH=src python -m repro.analysis.source_lint [paths]
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# rule name -> path prefixes (relative to the scan root) it skips
+DEFAULT_EXEMPT: Dict[str, Tuple[str, ...]] = {
+    "host-time": ("launch/", "data/"),
+    "np-random": ("launch/", "data/"),
+    "host-sync": ("launch/",),
+    "fresh-key": (),
+}
+
+_PRAGMA = re.compile(r"#[^#]*?\blint:\s*([a-z0-9, -]+?)(?:\s|$)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    rule: str
+    detail: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.detail}"
+
+
+def _pragmas(source: str) -> Dict[int, Set[str]]:
+    """line number -> set of suppressed rules ('host' covers all)."""
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA.search(line)
+        if m:
+            toks = {t.strip() for t in m.group(1).split(",") if t.strip()}
+            out[i] = {t[:-3] if t.endswith("-ok") else t for t in toks}
+    return out
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an attribute/name expression."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+_TIME_CALLS = {"time.time", "time.perf_counter", "time.monotonic",
+               "time.time_ns", "datetime.now", "datetime.datetime.now",
+               "datetime.utcnow", "datetime.datetime.utcnow"}
+_KEY_CALLS = {"jax.random.key", "jax.random.PRNGKey", "random.key",
+              "random.PRNGKey", "jrandom.PRNGKey", "jrandom.key"}
+_SYNC_CALLS = {"jax.device_get", "jax.block_until_ready"}
+_SYNC_METHODS = {"block_until_ready", "item"}
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, relpath: str, pragmas: Dict[int, Set[str]],
+                 active: Set[str]) -> None:
+        self.relpath = relpath
+        self.pragmas = pragmas
+        self.active = active
+        self.findings: List[Finding] = []
+
+    def _emit(self, node: ast.AST, rule: str, detail: str) -> None:
+        if rule not in self.active:
+            return
+        sup = self.pragmas.get(node.lineno, set())
+        if "host" in sup or rule in sup:
+            return
+        self.findings.append(
+            Finding(self.relpath, node.lineno, rule, detail))
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        # flag exactly the `np.random` base node: every `np.random.X` use
+        # contains it once, so longer chains don't double-report
+        name = _dotted(node)
+        if name in ("np.random", "numpy.random"):
+            self._emit(node, "np-random",
+                       f"{name}: use jax.random keys / utils.fastrng")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _dotted(node.func)
+        if name in _TIME_CALLS:
+            self._emit(node, "host-time",
+                       f"{name}(): host clock in library code")
+        if name in _KEY_CALLS and node.args and isinstance(
+                node.args[0], ast.Constant):
+            self._emit(node, "fresh-key",
+                       f"{name}({node.args[0].value!r}): constant-seed key "
+                       "in library code; thread the caller's key")
+        if name in _SYNC_CALLS:
+            self._emit(node, "host-sync", f"{name}(): device sync")
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr in _SYNC_METHODS and not node.args):
+            self._emit(node, "host-sync",
+                       f".{node.func.attr}(): device sync")
+        self.generic_visit(node)
+
+
+def lint_source(source: str, relpath: str,
+                rules: Optional[Set[str]] = None) -> List[Finding]:
+    """Findings in one file's source; ``relpath`` selects exemptions."""
+    active = set(DEFAULT_EXEMPT) if rules is None else set(rules)
+    active = {r for r in active
+              if not any(relpath.startswith(p)
+                         for p in DEFAULT_EXEMPT.get(r, ()))}
+    if not active:
+        return []
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(relpath, e.lineno or 0, "parse-error", str(e))]
+    v = _Visitor(relpath, _pragmas(source), active)
+    v.visit(tree)
+    return sorted(v.findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def default_root() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parents[1]   # src/repro
+
+
+def lint_paths(paths: Optional[Sequence[pathlib.Path]] = None
+               ) -> List[Finding]:
+    """Lint library files.  Default: every ``.py`` under ``src/repro``."""
+    root = default_root()
+    if paths is None:
+        files: Iterable[pathlib.Path] = sorted(root.rglob("*.py"))
+    else:
+        files = []
+        for p in paths:
+            p = pathlib.Path(p)
+            files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    out: List[Finding] = []
+    for f in files:
+        try:
+            rel = f.resolve().relative_to(root).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        out.extend(lint_source(f.read_text(), rel))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    findings = lint_paths([pathlib.Path(a) for a in argv] or None)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"{len(findings)} hygiene finding(s); suppress a legitimate "
+              "line with '# lint: <rule>-ok'", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,253 @@
+"""Named audit targets: the traced programs the CI budgets pin.
+
+Each target is a zero-argument callable returning ``{program_name:
+json-able report}``.  Programs are traced abstractly (ShapeDtypeStruct
+inputs) — nothing trains, nothing allocates device buffers beyond what
+compilation itself needs — and every launch-bearing trace is preceded by
+``jax.clear_caches()`` so jit caches from earlier traces cannot freeze
+stale kernel names into the jaxpr (launch labels are static jit arguments
+of the kernel wrappers, but intermediate jit boundaries above them would
+otherwise replay unlabeled traces).
+
+The ``lenet_tile_grid`` target shards over the crossbar mesh and needs at
+least ``grid rows x cols`` devices — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (scripts/audit.py
+--force-devices does this before importing jax).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_audit import audit_donation, audit_fn
+
+LENET_POLICY = "managed:use_pallas=true:bm_mode=two_phase"
+LENET_BATCH = 8
+
+GRID = (2, 2)
+GRID_ROWS, GRID_COLS = 16, 12          # logical tile audited on the grid
+GRID_BATCH = 8
+GRID_CHUNK = 4                          # stream chunk (rows per round)
+
+
+def _key_struct():
+    return jax.eval_shape(lambda: jax.random.key(0))  # lint: fresh-key-ok
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# LeNet scan-engine step (single device)
+# ---------------------------------------------------------------------------
+
+def _lenet_setup():
+    from repro import optim
+    from repro.analog.presets import parse_policy
+    from repro.models import lenet
+    from repro.train import engine
+
+    cfg = lenet.LeNetConfig.from_policy(parse_policy(LENET_POLICY))
+    opt = optim.sgd(cfg.lr)
+    params = jax.eval_shape(lambda k: lenet.init(k, cfg), _key_struct())
+    opt_state = jax.eval_shape(opt.init, params)
+    step = engine.make_cnn_step_fn(cfg, opt)
+    x = _sds((LENET_BATCH, 28, 28, 1))
+    y = _sds((LENET_BATCH,), jnp.int32)
+    return cfg, params, opt_state, step, x, y
+
+
+def lenet_target() -> Dict[str, Any]:
+    """Full train step + per-layer isolated forward reads + donation.
+
+    The per-layer programs trace one layer's analog forward read under
+    ``ops.launch_label(layer)``; the managed-read pin (exactly ONE fused
+    launch per analog layer, PR 2's contract) lives there.  The full-step
+    program pins totals by kind across all three cycles of all layers.
+    """
+    from repro.analog.modules import AnalogConv2d, AnalogLinear
+    from repro.kernels import ops
+    from repro.models import lenet
+
+    cfg, params, opt_state, step, x, y = _lenet_setup()
+    out: Dict[str, Any] = {}
+
+    jax.clear_caches()
+    rep = audit_fn(step, params, opt_state, x, y, _key_struct())
+    out["step"] = rep.to_json()
+
+    apply_of = {"conv": AnalogConv2d.apply, "linear": AnalogLinear.apply}
+    p1, _p2, flat = lenet.feature_sizes(cfg)
+    layer_inputs = {
+        "K1": x,
+        "K2": _sds((LENET_BATCH, p1[0], p1[1], 16)),
+        "W3": _sds((LENET_BATCH, flat)),
+        "W4": _sds((LENET_BATCH,) + _dense_out(params["W3"])),
+    }
+    for layer in lenet.LAYERS:
+        state = params[layer]
+        fn = apply_of[state.meta.kind]
+        jax.clear_caches()
+        with ops.launch_label(layer):
+            rep = audit_fn(
+                lambda s, xv, k: fn(s, xv, k, mode=cfg.layer_mode(layer)),
+                state, layer_inputs[layer], _key_struct())
+        out[f"read__{layer}"] = rep.to_json()
+
+    jax.clear_caches()
+    don = audit_donation(step, (params, opt_state, x, y, _key_struct()),
+                         donate_argnums=(0, 1))
+    out["donation__step"] = don.to_json()
+    return out
+
+
+def _dense_out(state) -> tuple:
+    """Logical output width of a dense analog state (replica-averaged)."""
+    m_phys = state.w.shape[0]
+    d = state.meta.cfg.devices_per_weight
+    return (m_phys // d,)
+
+
+# ---------------------------------------------------------------------------
+# Sharded tile grid: chunked streaming read + streaming update
+# ---------------------------------------------------------------------------
+
+def _grid_cfg():
+    from repro.core.device import RPUConfig
+    # raw sharded read: management stays digital around it, so BM off and
+    # each chunk round is exactly one read -> one collective round
+    return RPUConfig(tile_grid=GRID, bound_management=False,
+                     noise_management=False, update_management=False)
+
+
+def _require_grid_devices() -> None:
+    need = GRID[0] * GRID[1]
+    have = len(jax.devices())
+    if have < need:
+        raise RuntimeError(
+            f"tile-grid target needs >= {need} devices, have {have}; run "
+            "under XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+            "(scripts/audit.py --force-devices 8 sets this before "
+            "importing jax)")
+
+
+def lenet_tile_grid_target() -> Dict[str, Any]:
+    """Sharded-grid invariants: psum structure of reads, silence of updates.
+
+    * ``grid_read`` — one raw sharded read: 2 psum equations (the partial-y
+      reduction along the contraction axis and the global saturation-flag
+      OR), ONE dependency round.
+    * ``streamed_read`` — a chunk loop of sharded reads (the streaming conv
+      forward's shape): the budget pins ``collective_rounds_per_iter == 1``
+      on the chunk loop — PR 4's "one psum per chunk round" contract.
+    * ``streamed_update`` — the streamed grid update cycle: chunk loops run
+      per device with ZERO collectives (counts accumulate shard-locally;
+      only finalize touches the blocks).
+    """
+    from repro.core import tile as tile_lib
+    from repro.core import tile_grid, update
+
+    _require_grid_devices()
+    cfg = _grid_cfg()
+    m, n = GRID_ROWS, GRID_COLS
+    w = _sds((m, n))
+    key = _key_struct()
+    out: Dict[str, Any] = {}
+
+    def grid_read(wv, xv, k):
+        return tile_grid.grid_analog_mvm_sharded(wv, xv, k, cfg)
+
+    jax.clear_caches()
+    out["grid_read"] = audit_fn(
+        grid_read, w, _sds((GRID_BATCH, n)), key).to_json()
+
+    def streamed_read(wv, xv, k):
+        total = xv.shape[0]
+        nchunks = total // GRID_CHUNK
+
+        def body(c, acc):
+            start = c * GRID_CHUNK
+            xc = jax.lax.dynamic_slice_in_dim(xv, start, GRID_CHUNK, 0)
+            y, _sat = tile_grid.grid_analog_mvm_sharded(
+                wv, xc, k, cfg, row_offset=start, total_rows=total)
+            return jax.lax.dynamic_update_slice_in_dim(acc, y, start, 0)
+
+        acc = jnp.zeros((total, m), jnp.float32)
+        return jax.lax.fori_loop(0, nchunks, body, acc)
+
+    jax.clear_caches()
+    out["streamed_read"] = audit_fn(
+        streamed_read, w, _sds((GRID_BATCH, n)), key).to_json()
+
+    maps = jax.eval_shape(
+        lambda k: tile_lib.init_tile(k, m, n, cfg).maps, _key_struct())
+    total = GRID_BATCH
+    x_all = _sds((total, n))
+    d_all = _sds((total, m))
+
+    def get_chunk(src, start, chunk):
+        xs, ds = src
+        return (jax.lax.dynamic_slice_in_dim(xs, start, chunk, 0),
+                jax.lax.dynamic_slice_in_dim(ds, start, chunk, 0))
+
+    def streamed_update(wv, mp, xs, ds, k):
+        return update.pulse_update_streamed(
+            wv, mp, (xs, ds), get_chunk, k, cfg, 0.01,
+            total=total, chunk=GRID_CHUNK)
+
+    jax.clear_caches()
+    out["streamed_update"] = audit_fn(
+        streamed_update, w, maps, x_all, d_all, key).to_json()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek smoke LM step + serve decode
+# ---------------------------------------------------------------------------
+
+def deepseek_smoke_target() -> Dict[str, Any]:
+    """LM scan-step and serve programs on the reduced DeepSeek config."""
+    from repro.configs import registry
+    from repro.serve import engine as serve
+    from repro.train import lm
+
+    cfg = registry.get_config("deepseek_7b", smoke=True)
+    params, opt_state, _axes = lm.abstract_train_state(_key_struct(), cfg)
+    multi, opt = lm.make_scan_train_step(cfg)
+    steps, bsz, seq = 4, 2, 16
+    batches = {"tokens": _sds((steps, bsz, seq + 1), jnp.int32)}
+    keys = jax.eval_shape(
+        lambda k: jax.vmap(lambda i: jax.random.fold_in(k, i))(
+            jnp.arange(steps)), _key_struct())
+    out: Dict[str, Any] = {}
+
+    jax.clear_caches()
+    out["scan_steps"] = audit_fn(
+        multi, params, opt_state, batches, keys).to_json()
+
+    jax.clear_caches()
+    out["donation__scan_steps"] = audit_donation(
+        multi, (params, opt_state, batches, keys),
+        donate_argnums=(0, 1)).to_json()
+
+    max_seq = 32
+    cache = jax.eval_shape(lambda: serve.init_cache(cfg, 1, max_seq))
+    tok = _sds((1, 1), jnp.int32)
+
+    def decode(p, t, c):
+        return serve.serve_step(p, t, c, cfg)
+
+    jax.clear_caches()
+    out["serve_decode"] = audit_fn(decode, params, tok, cache).to_json()
+    return out
+
+
+TARGETS: Dict[str, Callable[[], Dict[str, Any]]] = {
+    "lenet": lenet_target,
+    "lenet_tile_grid": lenet_tile_grid_target,
+    "deepseek_smoke": deepseek_smoke_target,
+}

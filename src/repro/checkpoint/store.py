@@ -106,7 +106,8 @@ def save(directory: str, step: int, tree: PyTree,
     delay = _write_delay_s()
 
     leaves, treedef = _flatten_with_paths(tree)
-    index = {"step": step, "time": time.time(), "treedef_repr": str(treedef),
+    index = {"step": step, "time": time.time(),  # lint: host-time-ok
+             "treedef_repr": str(treedef),
              "leaves": [], "meta": extra_meta or {}}
     for i, (key, leaf) in enumerate(leaves):
         if delay:

@@ -145,12 +145,13 @@ def tap_major_weights(w: jax.Array, geom, d_avg: int, out_f_p: int
 @functools.partial(
     jax.jit,
     static_argnames=("geom", "sigma", "alpha", "two_phase", "retry_scale",
-                     "d_avg", "interpret"))
+                     "d_avg", "interpret", "name"))
 def conv_managed_mvm_pallas(w: jax.Array, xpad: jax.Array, nm_s: jax.Array,
                             seeds: jax.Array, *, geom, sigma: float,
                             alpha: float, two_phase: bool = False,
                             retry_scale: float = 16.0, d_avg: int = 1,
-                            interpret: bool = False
+                            interpret: bool = False,
+                            name: str = "managed_read_conv"
                             ) -> Tuple[jax.Array, jax.Array]:
     """Implicit-im2col fused managed conv read.
 
@@ -188,6 +189,7 @@ def conv_managed_mvm_pallas(w: jax.Array, xpad: jax.Array, nm_s: jax.Array,
 
     y, sat = pl.pallas_call(
         kern,
+        name=name,
         grid=(geom.b,),
         in_specs=[
             pl.BlockSpec((1, 2), lambda i: (0, 0)),             # seeds

@@ -110,6 +110,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     out = pl.pallas_call(
         kern,
+        name="flash_attention",
         grid=(b * h, nq, nk),
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda g, i, j: (g, i, 0)),

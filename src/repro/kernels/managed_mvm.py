@@ -183,14 +183,14 @@ def _kernel(seeds_ref, off_ref, nm_ref, x_ref, w_ref, y_ref, sat_ref,
     jax.jit,
     static_argnames=("sigma", "alpha", "n_seg", "transpose", "two_phase",
                      "retry_scale", "d_avg", "total_rows", "bm", "bk",
-                     "interpret"))
+                     "interpret", "name"))
 def managed_mvm_pallas(w: jax.Array, x2d: jax.Array, nm_s: jax.Array,
                        seeds: jax.Array, *, sigma: float, alpha: float,
                        n_seg: int = 1, transpose: bool = False,
                        two_phase: bool = False, retry_scale: float = 16.0,
                        d_avg: int = 1, row_offset=None,
                        total_rows: int = None, bm: int = 128, bk: int = 128,
-                       interpret: bool = False
+                       interpret: bool = False, name: str = "managed_read"
                        ) -> Tuple[jax.Array, jax.Array]:
     """Fused managed analog read (NM scale + two-phase BM + replica average).
 
@@ -283,6 +283,7 @@ def managed_mvm_pallas(w: jax.Array, x2d: jax.Array, nm_s: jax.Array,
 
     y, sat = pl.pallas_call(
         kern,
+        name=name,
         grid=(nb, nk),
         in_specs=[
             pl.BlockSpec((1, 2), lambda i, k: (0, 0)),      # seeds

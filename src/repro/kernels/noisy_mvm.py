@@ -123,12 +123,13 @@ def _kernel(seed_ref, off_ref, x_ref, w_ref, y_ref, sat_ref, seg_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("sigma", "alpha", "n_seg", "transpose", "total_rows",
-                     "bm", "bn", "bk", "interpret"))
+                     "bm", "bn", "bk", "interpret", "name"))
 def noisy_mvm_pallas(w: jax.Array, x2d: jax.Array, seed: jax.Array, *,
                      sigma: float, alpha: float, n_seg: int = 1,
                      transpose: bool = False, row_offset=None,
                      total_rows: int = None, bm: int = 128, bn: int = 128,
-                     bk: int = 128, interpret: bool = False
+                     bk: int = 128, interpret: bool = False,
+                     name: str = "noisy_read"
                      ) -> Tuple[jax.Array, jax.Array]:
     """Fused noisy/bounded MVM.
 
@@ -195,6 +196,7 @@ def noisy_mvm_pallas(w: jax.Array, x2d: jax.Array, seed: jax.Array, *,
 
     y, sat = pl.pallas_call(
         kern,
+        name=name,
         grid=(nb, no, nk),
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),       # seed

@@ -9,8 +9,10 @@ too tiny to be worth launching a kernel for.
 
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import functools
-from typing import Tuple
+from typing import Iterator, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +24,38 @@ from repro.kernels.pulse_update import pulse_counts_pallas, pulse_update_pallas
 from repro.utils import fastrng
 
 Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Stable launch labeling (repro.analysis.jaxpr_audit attribution hook)
+# ---------------------------------------------------------------------------
+# Every Pallas launch this module issues carries a stable *kind* name
+# (``managed_read``, ``noisy_read``, ``pulse_update``, ``pulse_counts``,
+# ``managed_read_conv``) as the kernel name, so static-analysis passes over
+# traced jaxprs can count launches per kind without pattern-matching
+# internals.  ``launch_label`` optionally appends a trace-time label
+# (``managed_read__K2``; ``__`` because pallas mangles brackets in kernel
+# names): the auditor wraps per-layer traces in it to
+# attribute launch counts to layers.  The label only changes the kernel
+# *name* — numerics and lowering are identical with or without it.
+
+_LAUNCH_LABEL: contextvars.ContextVar[str] = contextvars.ContextVar(
+    "repro_launch_label", default="")
+
+
+@contextlib.contextmanager
+def launch_label(label: str) -> Iterator[None]:
+    """Append ``__label`` to the kind name of every launch traced within."""
+    tok = _LAUNCH_LABEL.set(label)
+    try:
+        yield
+    finally:
+        _LAUNCH_LABEL.reset(tok)
+
+
+def launch_name(kind: str) -> str:
+    """The kernel name for a launch of ``kind`` under the current label."""
+    label = _LAUNCH_LABEL.get()
+    return f"{kind}__{label}" if label else kind
 
 
 def _interpret_default() -> bool:
@@ -60,7 +94,8 @@ def noisy_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
     y2d, satblk = noisy_mvm_pallas(
         w, x2d, seed, sigma=float(sigma), alpha=float(cfg.out_bound),
         n_seg=n_seg, transpose=transpose, row_offset=row_offset,
-        total_rows=total_rows, interpret=_interpret_default())
+        total_rows=total_rows, interpret=_interpret_default(),
+        name=launch_name("noisy_read"))
     sat = jnp.any(satblk > 0, axis=-1)
     out_dim = c if transpose else r
     return (y2d.reshape(*batch_shape, out_dim),
@@ -115,7 +150,8 @@ def managed_mvm(w: Array, x: Array, key: Array, cfg: RPUConfig, *,
         n_seg=n_seg, transpose=transpose, two_phase=use_bm,
         retry_scale=float(management.TWO_PHASE_SCALE), d_avg=d_avg,
         row_offset=row_offset, total_rows=total_rows,
-        interpret=_interpret_default())
+        interpret=_interpret_default(),
+        name=launch_name("managed_read"))
     out_f = c if transpose else r // d_avg
     return (y2d.reshape(*batch_shape, out_f), sat.reshape(batch_shape))
 
@@ -150,7 +186,8 @@ def conv_managed_mvm(w: Array, xpad: Array, geom, nm_s: Array, key: Array,
         w, xpad, nm_s, seeds, geom=geom, sigma=float(sigma),
         alpha=float(cfg.out_bound), two_phase=use_bm,
         retry_scale=float(management.TWO_PHASE_SCALE),
-        d_avg=cfg.devices_per_weight, interpret=_interpret_default())
+        d_avg=cfg.devices_per_weight, interpret=_interpret_default(),
+        name=launch_name("managed_read_conv"))
 
 
 def pulse_update_fused(w: Array, maps: DeviceMaps, streams_rows: Array,
@@ -163,7 +200,8 @@ def pulse_update_fused(w: Array, maps: DeviceMaps, streams_rows: Array,
     seed = fastrng.key_to_seed(key)
     return pulse_update_pallas(
         w, maps.dw_up, maps.dw_dn, maps.bound, rows2, cols2, seed,
-        ctoc=float(cfg.dw_min_ctoc), interpret=_interpret_default())
+        ctoc=float(cfg.dw_min_ctoc), interpret=_interpret_default(),
+        name=launch_name("pulse_update"))
 
 
 def pulse_counts(streams_rows: Array, streams_cols: Array
@@ -180,4 +218,5 @@ def pulse_counts(streams_rows: Array, streams_cols: Array
     n = streams_cols.shape[-1]
     rows2 = streams_rows.reshape(-1, m)
     cols2 = streams_cols.reshape(-1, n)
-    return pulse_counts_pallas(rows2, cols2, interpret=_interpret_default())
+    return pulse_counts_pallas(rows2, cols2, interpret=_interpret_default(),
+                               name=launch_name("pulse_counts"))

@@ -108,10 +108,10 @@ def _make_counts_kernel(nt):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bt", "interpret"))
+    jax.jit, static_argnames=("bm", "bn", "bt", "interpret", "name"))
 def pulse_counts_pallas(streams_rows: jax.Array, streams_cols: jax.Array, *,
                         bm: int = 128, bn: int = 128, bt: int = 128,
-                        interpret: bool = False):
+                        interpret: bool = False, name: str = "pulse_counts"):
     """Fused coincidence-count contraction only: the chunked-update entry.
 
     The streaming update cycle accumulates per-chunk ``(count_up,
@@ -135,6 +135,7 @@ def pulse_counts_pallas(streams_rows: jax.Array, streams_cols: jax.Array, *,
 
     up, dn = pl.pallas_call(
         _make_counts_kernel(tp // bt),
+        name=name,
         grid=(mp // bm, np_ // bn, tp // bt),
         in_specs=[
             pl.BlockSpec((bt, bm), lambda i, j, t: (t, i)),   # row streams
@@ -161,12 +162,13 @@ def pulse_counts_pallas(streams_rows: jax.Array, streams_cols: jax.Array, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("ctoc", "bm", "bn", "bt", "interpret"))
+    static_argnames=("ctoc", "bm", "bn", "bt", "interpret", "name"))
 def pulse_update_pallas(w: jax.Array, dw_up: jax.Array, dw_dn: jax.Array,
                         bound: jax.Array, streams_rows: jax.Array,
                         streams_cols: jax.Array, seed: jax.Array, *,
                         ctoc: float, bm: int = 128, bn: int = 128,
-                        bt: int = 128, interpret: bool = False) -> jax.Array:
+                        bt: int = 128, interpret: bool = False,
+                        name: str = "pulse_update") -> jax.Array:
     """Fused pulse update.  ``streams_rows`` (T, M_phys), ``streams_cols``
     (T, N) signed {0, +-1}; returns the clipped new physical weights."""
     m, n = w.shape
@@ -188,6 +190,7 @@ def pulse_update_pallas(w: jax.Array, dw_up: jax.Array, dw_dn: jax.Array,
 
     out = pl.pallas_call(
         kern,
+        name=name,
         grid=(mp // bm, np_ // bn, tp // bt),
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j, t: (0, 0)),     # seed

@@ -177,7 +177,7 @@ def apply(params: Dict[str, AnalogState], images: Array,
     if key is None:
         if cfg.mode != "digital":
             raise ValueError("analog mode requires a PRNG key")
-        key = jax.random.key(0)
+        key = jax.random.key(0)  # digital; lint: fresh-key-ok
     ks = jax.random.split(key, 4)
     lr = cfg.lr
     # apply-time config/padding overrides keep post-init retrofits

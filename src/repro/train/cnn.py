@@ -132,7 +132,7 @@ def train(cfg: lenet.LeNetConfig, *, epochs: int = 15, batch: int = 8,
     else:
         step, _ = make_train_step(cfg, opt)
 
-    t0 = time.time()
+    t0 = time.time()  # host driver loop; lint: host-time-ok
     for epoch in range(start_epoch, epochs):
         if injector is not None:
             injector.check(epoch, flush=ckpt)
@@ -154,7 +154,8 @@ def train(cfg: lenet.LeNetConfig, *, epochs: int = 15, batch: int = 8,
             history.append(err)
             if verbose:
                 print(f"[epoch {epoch + 1:3d}/{epochs}] test error "
-                      f"{100 * err:6.2f}%  ({time.time() - t0:6.1f}s)",
+                      f"{100 * err:6.2f}%  "
+                      f"({time.time() - t0:6.1f}s)",  # lint: host-time-ok
                       flush=True)
             if log_path:
                 _dump(log_path, cfg, history, epochs, batch, n_train, seed)
@@ -168,7 +169,7 @@ def train(cfg: lenet.LeNetConfig, *, epochs: int = 15, batch: int = 8,
                 injector.check(epoch, saving=True)
     if ckpt is not None:
         ckpt.wait()
-    wallclock = time.time() - t0
+    wallclock = time.time() - t0  # host timing; lint: host-time-ok
     result = {
         "test_error": history,
         "final_error": history[-1] if history else None,

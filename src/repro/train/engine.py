@@ -156,6 +156,30 @@ def _reject_crossbar_mesh_conflict(cfg) -> None:
 # Scan-fused CNN epoch
 # ---------------------------------------------------------------------------
 
+def make_cnn_step_fn(cfg, opt: Optimizer, *,
+                     data_parallel: bool = False) -> Callable:
+    """The single train step the epoch scan iterates.
+
+    ``step(params, opt_state, x, y, key) -> (params, opt_state)`` —
+    returned *unjitted* so :mod:`repro.analysis` can trace it abstractly
+    (launch/collective budgets audit the exact body the epoch program
+    runs, not a lookalike).
+    """
+    from repro.models import lenet
+
+    def grads_of(params, xb, yb, key):
+        return jax.grad(lenet.loss_fn, allow_int=True)(
+            params, xb, yb, key, cfg)
+
+    grads_fn = data_parallel_grads(grads_of) if data_parallel else grads_of
+
+    def step(params, opt_state, x, y, key):
+        g = grads_fn(params, x, y, key)
+        return opt.update(g, opt_state, params)
+
+    return step
+
+
 def make_cnn_epoch_fn(cfg, opt: Optimizer, *, batch: int,
                       data_parallel: bool = False) -> Callable:
     """Build the jitted epoch program for the LeNet/MNIST trainer.
@@ -165,16 +189,10 @@ def make_cnn_epoch_fn(cfg, opt: Optimizer, *, batch: int,
     training split and ``epoch`` the epoch index.  params/opt_state are
     donated: the caller must thread the returned values.
     """
-    from repro.models import lenet
-
     if data_parallel:
         _reject_crossbar_mesh_conflict(cfg)
 
-    def grads_of(params, xb, yb, key):
-        return jax.grad(lenet.loss_fn, allow_int=True)(
-            params, xb, yb, key, cfg)
-
-    grads_fn = data_parallel_grads(grads_of) if data_parallel else grads_of
+    step_fn = make_cnn_step_fn(cfg, opt, data_parallel=data_parallel)
 
     @functools.partial(jax.jit, donate_argnums=(0, 1))
     def run_epoch(params, opt_state, xs, ys, k_data, k_train, epoch):
@@ -190,8 +208,7 @@ def make_cnn_epoch_fn(cfg, opt: Optimizer, *, batch: int,
         def body(carry, inp):
             p, s = carry
             x, y, k = inp
-            g = grads_fn(p, x, y, k)
-            p, s = opt.update(g, s, p)
+            p, s = step_fn(p, s, x, y, k)
             return (p, s), ()
 
         (params, opt_state), _ = jax.lax.scan(

@@ -1,6 +1,12 @@
-"""Unit tests for the trip-count-aware HLO analyzer on synthetic HLO text."""
+"""Unit tests for the trip-count-aware HLO analyzer on synthetic HLO text.
 
-import numpy as np
+Imports go through the ``repro.launch.hlo_analysis`` compatibility shim on
+purpose: the analyzer moved to ``repro.analysis.hlo`` and the old surface
+must keep re-exporting everything."""
+
+import warnings
+
+import pytest
 
 from repro.launch import hlo_analysis as H
 
@@ -64,6 +70,51 @@ def test_dot_flops_and_collectives_scaled_by_trips():
     assert a["coll_total"] == 256 * 12
 
 
-def test_fallback_max_constant():
+def test_precise_paths_emit_no_warnings():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", H.HloParseWarning)
+        comps, entry = H.split_computations(SYNTH)
+        assert entry == "%main"
+        assert H._trip_count(comps["%cond"]) == 12
+        H.analyse_hlo(SYNTH)
+
+
+def test_fallback_max_constant_warns():
+    # no ROOT compare(i, constant) -> largest-constant heuristic, flagged
     lines = ["%c1 = s32[] constant(7)", "%x = pred[] compare(%a, %b)"]
-    assert H._trip_count(lines) == 7
+    with pytest.warns(H.HloParseWarning) as rec:
+        assert H._trip_count(lines) == 7
+    assert rec[0].message.kind == "trip-count-fallback"
+    assert "7" in rec[0].message.detail
+
+
+def test_entry_fallback_warns():
+    headless = SYNTH.replace("ENTRY %main", "%main")
+    with pytest.warns(H.HloParseWarning) as rec:
+        comps, entry = H.split_computations(headless)
+    assert rec[0].message.kind == "entry-fallback"
+    # the convention: last printed computation is assumed to be the entry
+    assert entry == list(comps)[-1] == "%main"
+
+
+def test_trip_count_empty_condition_silent():
+    # degenerate but legal: no lines at all -> 1 trip, no warning noise
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", H.HloParseWarning)
+        assert H._trip_count([]) == 1
+
+
+# ---------------------------------------------------------------------------
+# input_output_alias parsing (donation-audit substrate)
+# ---------------------------------------------------------------------------
+
+def test_input_output_aliases_nested_braces():
+    hlo = ('HloModule m, input_output_alias={ {0}: (0, {}, may-alias), '
+           '{1}: (2, {}, may-alias) }, entry_computation_layout={(f32[2])}')
+    assert H.input_output_aliases(hlo) == {0: (0,), 2: (1,)}
+
+
+def test_input_output_aliases_tuple_path_and_absent():
+    hlo = 'HloModule m, input_output_alias={ {1, 0}: (3, {}, may-alias) }'
+    assert H.input_output_aliases(hlo) == {3: (1, 0)}
+    assert H.input_output_aliases("HloModule m") == {}

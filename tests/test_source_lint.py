@@ -1,0 +1,109 @@
+"""Unit tests for the AST hygiene lint (repro.analysis.source_lint)."""
+
+from repro.analysis import source_lint as L
+
+
+def _rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# rule positives
+# ---------------------------------------------------------------------------
+
+def test_host_time_flagged():
+    src = "import time\nt0 = time.time()\n"
+    fs = L.lint_source(src, "core/x.py")
+    assert _rules(fs) == ["host-time"]
+    assert fs[0].line == 2
+
+
+def test_perf_counter_and_datetime_flagged():
+    src = ("import time, datetime\n"
+           "a = time.perf_counter()\n"
+           "b = datetime.datetime.now()\n")
+    assert _rules(L.lint_source(src, "core/x.py")) == [
+        "host-time", "host-time"]
+
+
+def test_np_random_flagged():
+    src = "import numpy as np\nx = np.random.rand(3)\n"
+    assert _rules(L.lint_source(src, "core/x.py")) == ["np-random"]
+
+
+def test_fresh_constant_key_flagged():
+    for call in ("jax.random.PRNGKey(0)", "jax.random.key(42)"):
+        fs = L.lint_source(f"k = {call}\n", "core/x.py")
+        assert _rules(fs) == ["fresh-key"], call
+
+
+def test_host_sync_flagged():
+    src = ("y = jax.device_get(x)\n"
+           "x.block_until_ready()\n"
+           "v = loss.item()\n")
+    assert _rules(L.lint_source(src, "core/x.py")) == ["host-sync"] * 3
+
+
+# ---------------------------------------------------------------------------
+# rule negatives: the legitimate spellings must stay clean
+# ---------------------------------------------------------------------------
+
+def test_threaded_key_not_flagged():
+    src = "k = jax.random.key(seed)\nk2 = jax.random.fold_in(key, i)\n"
+    assert L.lint_source(src, "core/x.py") == []
+
+
+def test_item_with_args_is_not_a_sync():
+    # dict.__getitem__-style .item(i) calls take args; the device sync
+    # spelling is the zero-arg method
+    assert L.lint_source("v = arr.item(0)\n", "core/x.py") == []
+
+
+def test_np_linalg_not_flagged():
+    assert L.lint_source("x = np.linalg.norm(v)\n", "core/x.py") == []
+
+
+# ---------------------------------------------------------------------------
+# pragmas and exemptions
+# ---------------------------------------------------------------------------
+
+def test_pragma_suppresses_single_rule():
+    src = "t0 = time.time()  # lint: host-time-ok\n"
+    assert L.lint_source(src, "core/x.py") == []
+
+
+def test_prefixed_pragma_suppresses():
+    src = "k = jax.random.key(0)  # digital; lint: fresh-key-ok\n"
+    assert L.lint_source(src, "core/x.py") == []
+
+
+def test_host_pragma_covers_all_rules():
+    src = "t0 = time.time(); x.block_until_ready()  # lint: host-ok\n"
+    assert L.lint_source(src, "core/x.py") == []
+
+
+def test_pragma_only_covers_its_own_line():
+    src = ("t0 = time.time()  # lint: host-time-ok\n"
+           "t1 = time.time()\n")
+    fs = L.lint_source(src, "core/x.py")
+    assert [(f.rule, f.line) for f in fs] == [("host-time", 2)]
+
+
+def test_launch_tree_exempt_from_host_rules_only():
+    src = "t0 = time.time()\nk = jax.random.key(0)\n"
+    fs = L.lint_source(src, "launch/driver.py")
+    assert _rules(fs) == ["fresh-key"]     # host-time exempt, key is not
+
+
+def test_parse_error_is_a_finding():
+    fs = L.lint_source("def broken(:\n", "core/x.py")
+    assert _rules(fs) == ["parse-error"]
+
+
+# ---------------------------------------------------------------------------
+# the gate: the library tree itself must be clean
+# ---------------------------------------------------------------------------
+
+def test_repo_library_tree_is_clean():
+    findings = L.lint_paths()
+    assert findings == [], "\n".join(str(f) for f in findings)
