@@ -1,0 +1,186 @@
+"""Benchmark: continuous-batching serving under synthetic heavy traffic.
+
+Drives thousands of concurrent request streams through the slot-rotating
+scheduler (``repro.serve.scheduler``): Poisson arrivals, mixed prompt and
+generation lengths, digital params vs an analog policy (``lm_managed`` by
+default — the managed RPU read of 1705.08014 in the per-token decode hot
+loop).  Reports requests/s, tokens/s, and p50/p99 request latency
+(admissible -> finished, wall-clock), post-warmup.
+
+Prompt lengths are drawn from a small bucket set so the per-length prefill
+compiles once per bucket during warmup and the timed region is pure
+steady-state serving.
+
+Run:    PYTHONPATH=src python benchmarks/bm_serve.py            # full
+        PYTHONPATH=src python benchmarks/bm_serve.py --smoke    # CI
+
+Results land in ``results/bench/bm_serve.json``; the digital-vs-analog
+table is recorded in docs/benchmarks.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from collections import deque
+
+import numpy as np
+
+RESULTS = os.path.join("results", "bench", "bm_serve.json")
+
+PROMPT_BUCKETS = (4, 8, 12, 16)
+SMOKE_PROMPT_BUCKETS = (4, 8)
+
+
+def make_stream(n_requests, *, vocab, buckets, gen_lo, gen_hi,
+                arrival_rate, seed):
+    """Synthetic traffic: Poisson arrivals (exponential inter-arrival in
+    scheduler ticks), prompt lengths from ``buckets``, generation lengths
+    uniform in [gen_lo, gen_hi]."""
+    from repro.serve import scheduler as sched
+    rng = np.random.default_rng(seed)
+    inter = rng.exponential(1.0 / arrival_rate, size=n_requests)
+    arrivals = np.floor(np.cumsum(inter)).astype(int)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.choice(buckets))
+        reqs.append(sched.Request(
+            rid=i,
+            prompt=rng.integers(0, vocab, size=plen).astype(np.int32),
+            max_new_tokens=int(rng.integers(gen_lo, gen_hi + 1)),
+            arrival=int(arrivals[i])))
+    return reqs
+
+
+def run_mode(label, analog_policy, *, arch, model_smoke, slots, requests,
+             buckets, gen_lo, gen_hi, arrival_rate, seed):
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import registry
+    from repro.models import transformer
+    from repro.analog import presets
+    from repro.serve import scheduler as sched
+
+    cfg = registry.get_config(arch, smoke=model_smoke)
+    akey = None
+    if analog_policy:
+        cfg = dataclasses.replace(
+            cfg, analog_policy=presets.parse_policy(analog_policy),
+            param_dtype=jnp.float32)
+        akey = jax.random.key(seed + 1)
+    params, _ = transformer.init_lm(jax.random.key(seed), cfg)
+
+    max_seq = max(buckets) + gen_hi
+    s = sched.ContinuousBatchingScheduler(params, cfg, slots=slots,
+                                          max_seq=max_seq, akey=akey)
+
+    # warmup: compile prefill for every bucket length + the decode/insert
+    # programs on this scheduler instance, then drop the warmup records
+    warm = [sched.Request(rid=-1 - i,
+                          prompt=np.zeros(b, np.int32),
+                          max_new_tokens=2)
+            for i, b in enumerate(buckets)]
+    s.run(warm)
+    s.completions.clear()
+    s.events.clear()
+
+    reqs = make_stream(requests, vocab=cfg.vocab, buckets=buckets,
+                       gen_lo=gen_lo, gen_hi=gen_hi,
+                       arrival_rate=arrival_rate, seed=seed)
+
+    # drive the tick loop by hand to wall-clock each request from the
+    # moment it became admissible to the moment it finished
+    pending = deque(sorted(reqs, key=lambda r: r.arrival))
+    admissible_at = {}
+    latency = {}
+    t0 = time.time()
+    while pending or not s.idle:
+        tnow = time.time()
+        while pending and pending[0].arrival <= s._tick:
+            r = pending.popleft()
+            admissible_at[r.rid] = tnow
+            s.submit(r)
+        for comp in s.step():
+            latency[comp.rid] = time.time() - admissible_at[comp.rid]
+    dt = time.time() - t0
+
+    done = s.completions
+    n_tok = sum(len(c.tokens) for c in done)
+    lats = np.asarray(sorted(latency.values()))
+    out = {
+        "requests": len(done),
+        "tokens": n_tok,
+        "wall_s": dt,
+        "req_per_s": len(done) / dt,
+        "tok_per_s": n_tok / dt,
+        "p50_ms": float(np.percentile(lats, 50) * 1e3),
+        "p99_ms": float(np.percentile(lats, 99) * 1e3),
+    }
+    print(f"[bm_serve {label:>12s}] {out['requests']} req, "
+          f"{out['tokens']} tok in {dt:.1f}s  "
+          f"{out['req_per_s']:7.2f} req/s  {out['tok_per_s']:7.1f} tok/s  "
+          f"p50 {out['p50_ms']:.0f} ms  p99 {out['p99_ms']:.0f} ms",
+          flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek_7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: a few dozen streams, short "
+                         "generations (keeps the script from rotting)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="concurrent streams (default 1000 full, 24 smoke)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="cache slots (default 8 full, 4 smoke)")
+    ap.add_argument("--analog-policy", default="lm_managed",
+                    help="analog policy spec for the analog mode "
+                         "(launch/train.py semantics)")
+    ap.add_argument("--modes", default="digital,analog")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="mean arrivals per scheduler tick "
+                         "(default 2.0 full, 1.0 smoke)")
+    ap.add_argument("--full-model", action="store_true",
+                    help="benchmark the full (non-smoke) model config; "
+                         "default uses the smoke config so the stream "
+                         "count, not the model size, is the workload")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    requests = args.requests or (24 if args.smoke else 1000)
+    slots = args.slots or (4 if args.smoke else 8)
+    rate = args.arrival_rate or (1.0 if args.smoke else 2.0)
+    buckets = SMOKE_PROMPT_BUCKETS if args.smoke else PROMPT_BUCKETS
+    gen_lo, gen_hi = (1, 4) if args.smoke else (2, 12)
+
+    out = {"workload": {
+        "arch": args.arch, "model_smoke": not args.full_model,
+        "requests": requests, "slots": slots,
+        "prompt_buckets": list(buckets), "gen_range": [gen_lo, gen_hi],
+        "arrival_rate_per_tick": rate,
+        "analog_policy": args.analog_policy,
+        "note": "Poisson arrivals; latency = admissible->finished "
+                "wall-clock, post-warmup",
+    }, "modes": {}}
+    for mode in args.modes.split(","):
+        mode = mode.strip()
+        pol = None if mode == "digital" else args.analog_policy
+        out["modes"][mode] = run_mode(
+            mode, pol, arch=args.arch, model_smoke=not args.full_model,
+            slots=slots, requests=requests, buckets=buckets,
+            gen_lo=gen_lo, gen_hi=gen_hi, arrival_rate=rate,
+            seed=args.seed)
+
+    if not args.smoke:
+        os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+        with open(RESULTS, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"[bm_serve] wrote {RESULTS}")
+
+
+if __name__ == "__main__":
+    main()

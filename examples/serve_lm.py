@@ -1,15 +1,20 @@
-"""Serve a small LM with batched requests: prefill + greedy decode.
+"""Serve a small LM: static batched decode or continuous batching.
 
 Uses the serving engine (KV caches / SSM states / SWA ring buffers) on the
 reduced configs; on a TPU pod the same engine serves the full configs via
-``repro.launch.serve``.
+``repro.launch.serve``.  With ``--analog-policy`` the params are converted
+to RPU crossbar tiles and every projection in the decode loop is a managed
+analog read; with ``--continuous`` requests rotate through cache slots
+mid-decode instead of padding one static batch.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch mixtral_8x7b]
+      PYTHONPATH=src python examples/serve_lm.py --arch deepseek_7b \
+          --analog-policy noise_free --continuous
 """
 
 import argparse
 
-from repro.launch.serve import serve
+from repro.launch.serve import serve, serve_continuous
 
 
 def main():
@@ -18,10 +23,25 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--analog-policy", default=None,
+                    help="serve on analog tiles, e.g. 'noise_free' "
+                         "(bit-exact vs digital) or 'lm_managed'")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over a slot pool instead of "
+                         "one static batch")
     args = ap.parse_args()
-    out = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-                gen=args.gen, smoke=True)
-    print("generated token ids (first request):", out[0][:16], "...")
+    if args.continuous:
+        done = serve_continuous(args.arch, slots=args.batch,
+                                n_requests=args.batch * 3,
+                                prompt_len=args.prompt_len, gen=args.gen,
+                                smoke=True,
+                                analog_policy=args.analog_policy)
+        print("first completion tokens:", done[0].tokens)
+    else:
+        out = serve(args.arch, batch=args.batch,
+                    prompt_len=args.prompt_len, gen=args.gen, smoke=True,
+                    analog_policy=args.analog_policy)
+        print("generated token ids (first request):", out[0][:16], "...")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,11 @@ and tests:
   ``k2_multi_device``    managed + 13-device mapping (paper's K2 recipe)
   ``lm_managed``         managed, normalized for LM tiles (f32 sim dtype,
                          seeded device maps — no stored-map memory overhead)
+  ``noise_free``         analog data path with every stochastic/bounding
+                         element off (no read noise, no output bound, no
+                         device variations, single device, management off)
+                         — with seeded maps this is bit-exact vs the
+                         digital einsum, the serving parity-suite anchor
 
 A preset reference may carry per-layer knob *modifiers*,
 ``name:field=value:...``, covering what used to be scattered global CLI
@@ -48,6 +53,8 @@ _PRESETS: Dict[str, Callable[[], Optional[RPUConfig]]] = {
     "fig4_no_variation": lambda: dev.rpu_nm_bm_um_bl1().without_variations(),
     "k2_multi_device": lambda: dev.rpu_full(13),
     "lm_managed": lambda: dev.rpu_nm_bm_um_bl1().normalized_for_lm(),
+    "noise_free": lambda: (dev.rpu_baseline().without_read_noise()
+                           .without_out_bound().without_variations()),
 }
 
 

@@ -27,6 +27,12 @@ from repro.analysis.jaxpr_audit import audit_donation, audit_fn
 LENET_POLICY = "managed:use_pallas=true:bm_mode=two_phase"
 LENET_BATCH = 8
 
+#: serving audit policy: the managed LM preset with the fixed-latency BM
+#: mode, so the whole managed read fuses into ONE Pallas launch per
+#: converted site (iterative BM cannot fuse — kernels/ops.managed_mvm
+#: rejects it)
+SERVE_POLICY = "lm_managed:use_pallas=true:bm_mode=two_phase"
+
 GRID = (2, 2)
 GRID_ROWS, GRID_COLS = 16, 12          # logical tile audited on the grid
 GRID_BATCH = 8
@@ -246,8 +252,55 @@ def deepseek_smoke_target() -> Dict[str, Any]:
     return out
 
 
+def deepseek_smoke_serve_target() -> Dict[str, Any]:
+    """Analog decode-hot-loop invariants (the continuous-batching inner
+    step traced by itself, single replica):
+
+    * ``serve_decode_analog`` — one batched ``serve_step`` over
+      policy-converted params under ``SERVE_POLICY``: the per-layer scan
+      must carry exactly ONE fused ``managed_read__decode`` launch per
+      converted projection per iteration (7 sites in the DeepSeek block) +
+      one for the unembed outside the scan, and ZERO collectives — a
+      single-replica decode step never leaves the device.
+    * ``donation__serve_decode`` — the carried cache is donated across
+      steps (the scheduler jits with ``donate_argnums`` on the cache), so
+      steady-state decode holds one live cache buffer, never two.
+    """
+    import dataclasses
+    from repro.configs import registry
+    from repro.kernels import ops
+    from repro.models import transformer
+    from repro.serve import engine as serve
+
+    cfg = registry.get_config("deepseek_7b", smoke=True,
+                              analog_policy=SERVE_POLICY)
+    cfg = dataclasses.replace(cfg, param_dtype=jnp.float32)
+    params = jax.eval_shape(
+        lambda k: transformer.init_lm(k, cfg)[0], _key_struct())
+    max_seq = 32
+    cache = jax.eval_shape(lambda: serve.init_cache(cfg, 1, max_seq))
+    tok = _sds((1, 1), jnp.int32)
+    akey = _key_struct()
+    out: Dict[str, Any] = {}
+
+    def decode(p, t, c, k):
+        return serve.serve_step(p, t, c, cfg, akey=k)
+
+    jax.clear_caches()
+    with ops.launch_label("decode"):
+        out["serve_decode_analog"] = audit_fn(
+            decode, params, tok, cache, akey).to_json()
+
+    jax.clear_caches()
+    out["donation__serve_decode"] = audit_donation(
+        decode, (params, tok, cache, akey),
+        donate_argnums=(2,)).to_json()
+    return out
+
+
 TARGETS: Dict[str, Callable[[], Dict[str, Any]]] = {
     "lenet": lenet_target,
     "lenet_tile_grid": lenet_tile_grid_target,
     "deepseek_smoke": deepseek_smoke_target,
+    "deepseek_smoke_serve": deepseek_smoke_serve_target,
 }

@@ -262,7 +262,7 @@ def lower_cell(arch: str, cell: ShapeCell, *, multi_pod: bool = False,
     cost = compiled.cost_analysis()
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
-    from repro.launch import hlo_analysis
+    from repro.analysis import hlo as hlo_analysis
     trip_aware = hlo_analysis.analyse_hlo(hlo)
 
     n_chips = mesh.devices.size
@@ -276,7 +276,7 @@ def lower_cell(arch: str, cell: ShapeCell, *, multi_pod: bool = False,
         "flops": cost.get("flops", 0.0) if cost else None,
         "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else None,
         "collectives": coll,
-        # trip-count-aware per-chip totals (repro.launch.hlo_analysis)
+        # trip-count-aware per-chip totals (repro.analysis.hlo)
         "trip_aware": trip_aware,
         "memory_analysis": _mem_record(mem),
         "params": cfg.param_count(),
@@ -378,7 +378,7 @@ def reanalyse_all():
     (accounting improvements without recompiling)."""
     import glob
     import gzip
-    from repro.launch import hlo_analysis
+    from repro.analysis import hlo as hlo_analysis
     for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
         hpath = path.replace(".json", ".hlo.txt.gz")
         if not os.path.exists(hpath):

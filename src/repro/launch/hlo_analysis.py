@@ -3,8 +3,12 @@
 The trip-count-aware HLO analysis grew into the HLO layer of the
 :mod:`repro.analysis` static-analysis package (jaxpr/HLO invariant budgets,
 see docs/architecture.md §"Static analysis & invariant budgets").  This
-module re-exports the full public surface so existing imports keep working;
-new code should import :mod:`repro.analysis.hlo` directly.
+module re-exports the full public surface so out-of-tree imports of the
+old path keep working; nothing in the repo imports through it anymore
+(``launch/dryrun.py`` was migrated to :mod:`repro.analysis.hlo`), and
+``tests/test_hlo_analysis.py`` deliberately imports this shim to pin the
+compatibility surface.  New code should import :mod:`repro.analysis.hlo`
+directly.
 """
 
 from __future__ import annotations

@@ -1,1 +1,13 @@
-"""Subpackage."""
+"""Serving: prefill + batched decode (``engine``) and continuous batching
+over a slot-allocated cache pool (``scheduler``).  Analog-converted params
+serve through the same entry points — pass ``akey`` and every managed RPU
+read runs in the per-token decode hot loop."""
+
+from repro.serve import engine  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    Completion,
+    ContinuousBatchingScheduler,
+    Request,
+    SlotEvent,
+    validate_serve_plan,
+)

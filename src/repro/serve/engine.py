@@ -10,6 +10,17 @@ activations are (B, 1, d), exactly the production batched-decode inner loop.
 
 Caches are plain pytrees stacked over layers (leading L axis), so they shard
 with the same logical rules as the parameters (kv_heads/model, batch/data).
+
+Analog serving: params produced by ``convert_to_analog`` (AnalogState
+tiles) dispatch through the same ``dense_apply`` type switch as training —
+pass ``akey`` and every analog projection draws its managed read keys from
+the same fold-in schedule as ``transformer.forward`` (per-layer ``li``,
+unembed 203, adapter 202), so a policy-converted model decodes without any
+engine-side special casing.  ``decode_step_key`` is THE per-token key
+schedule: ``greedy_generate`` and the continuous-batching scheduler
+(``serve/scheduler.py``) both derive each decode step's key through it,
+which is what makes batched decode replayable and, for noise-free configs,
+token-exact against per-request oracles.
 """
 
 from __future__ import annotations
@@ -25,6 +36,22 @@ from repro.models import layers as L
 from repro.models import transformer as T
 
 Array = jax.Array
+
+#: fold_in offset separating decode-step keys from the per-layer (li),
+#: adapter (201/202), unembed (203) and encoder (1000+li) constants that
+#: ``transformer``'s schedule consumes from the same base key.
+DECODE_KEY_OFFSET = 1 << 20
+
+
+def decode_step_key(akey, step):
+    """Per-decode-step analog key: ``fold_in(akey, OFFSET + step)``.
+
+    ``step`` may be a python int or a traced scalar (the ``greedy_generate``
+    scan counter).  None passes through so digital callers stay key-free.
+    """
+    if akey is None:
+        return None
+    return jax.random.fold_in(akey, DECODE_KEY_OFFSET + step)
 
 
 def cache_len_for(cfg: ModelConfig, max_seq: int) -> int:
@@ -84,7 +111,8 @@ def prefill(params, tokens: Array, cfg: ModelConfig, *, max_seq: int,
     if cfg.encoder_layers > 0:
         e = enc_embeds.astype(x.dtype)
         if "adapter" in params:        # frontend adapter (as in forward())
-            e = L.dense_apply(params["adapter"], e)
+            ek = None if akey is None else jax.random.fold_in(akey, 202)
+            e = L.dense_apply(params["adapter"], e, key=ek)
         e_pos = jnp.arange(e.shape[1])[None]
         e, _ = T._scan_layers_enc(params["enc_layers"], e, cfg,
                                   positions=e_pos, akey=akey)
@@ -112,7 +140,8 @@ def prefill(params, tokens: Array, cfg: ModelConfig, *, max_seq: int,
     if cfg.tie_embeddings:
         logits = L.unembed_apply(params["embed"], x_last)
     else:
-        logits = L.dense_apply(params["unembed"], x_last)
+        uk = None if akey is None else jax.random.fold_in(akey, 203)
+        logits = L.dense_apply(params["unembed"], x_last, key=uk)
     caches["pos"] = jnp.full((tokens.shape[0],), tokens.shape[1],
                              jnp.int32)
     return logits, caches
@@ -141,7 +170,8 @@ def serve_step(params, tokens_t: Array, cache: Dict[str, Array],
     if cfg.tie_embeddings:
         logits = L.unembed_apply(params["embed"], x)
     else:
-        logits = L.dense_apply(params["unembed"], x)
+        uk = None if akey is None else jax.random.fold_in(akey, 203)
+        logits = L.dense_apply(params["unembed"], x, key=uk)
     new_cache = dict(new_layer_cache)
     new_cache["pos"] = pos + 1
     return logits, new_cache
@@ -150,18 +180,28 @@ def serve_step(params, tokens_t: Array, cache: Dict[str, Array],
 def greedy_generate(params, prompt: Array, cfg: ModelConfig, *,
                     n_steps: int, max_seq: int,
                     enc_embeds: Optional[Array] = None, akey=None):
-    """Simple batched greedy loop (example/e2e-test driver)."""
+    """Simple batched greedy loop (example/e2e-test driver).
+
+    With ``akey`` the prefill consumes the base key and decode step ``i``
+    consumes ``decode_step_key(akey, i)``.  The continuous-batching
+    scheduler derives its keys through the same function (over its global
+    step counter), so scheduler runs are replayable; a per-request run of
+    this loop is the scheduler's token-parity oracle — exact for digital
+    params and for noise-free analog configs (whose reads are
+    key-independent), fresh-noise-per-step for noisy configs.
+    """
     logits, cache = prefill(params, prompt, cfg, max_seq=max_seq,
                             enc_embeds=enc_embeds, akey=akey)
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
 
-    def step(carry, _):
+    def step(carry, i):
         tok, cache = carry
-        logits, cache = serve_step(params, tok, cache, cfg, akey=akey)
+        logits, cache = serve_step(params, tok, cache, cfg,
+                                   akey=decode_step_key(akey, i))
         nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
         return (nxt, cache), nxt.squeeze(-1)
 
-    (_, cache), toks = jax.lax.scan(step, (tok, cache), None,
-                                    length=n_steps - 1)
+    (_, cache), toks = jax.lax.scan(step, (tok, cache),
+                                    jnp.arange(n_steps - 1))
     out = jnp.concatenate([tok, toks.T], axis=1)
     return out, cache

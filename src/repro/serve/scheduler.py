@@ -1,0 +1,367 @@
+"""Continuous batching: admit requests mid-decode into freed cache slots.
+
+The static serving path (``engine.greedy_generate``) decodes one fixed
+batch to completion — every sequence occupies its cache row for the full
+run even after it finishes.  Production traffic is a stream: requests
+arrive at arbitrary times with mixed prompt/generation lengths.  This
+scheduler keeps one batched decode loop hot over a fixed pool of ``slots``
+cache rows and rotates requests through it:
+
+  queued --admit--> prefill into a free slot --decode--> batched
+  ``serve_step`` over all live slots --finish (EOS / max-new)--> slot
+  freed --> head of the queue admitted into it, mid-decode.
+
+Determinism / replayability
+---------------------------
+Admission is strictly FIFO over submission order, the freed-slot choice is
+always the lowest free index, and analog decode keys derive from
+``engine.decode_step_key`` over the scheduler's global step counter — the
+same (params, requests, slots, seed) always produces the same event log.
+Because batched decode rows are computed independently (pinned by
+tests/test_serve_scheduler.py), every request's emitted tokens match a
+per-request ``greedy_generate`` oracle token-for-token for digital params
+and noise-free analog configs regardless of what else shares the batch;
+noisy analog reads are replayable but draw batch-composition-dependent
+noise, so they match the oracle in distribution only.
+
+Sharding
+--------
+Pass a :class:`~repro.distributed.sharding.MeshPlan` to shard the slot
+axis of the KV/SSD caches over the ``'data'`` replicas of the composed
+``('pipe', 'data', 'array_row', 'array_col')`` mesh.  The plan is
+validated against every tile grid an analog rule of the config could
+route through — the same composition rules as training (data x
+sharded-tile rejected; a grid the pool cannot hold composes fine through
+the serial oracle).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.serve import engine
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Request:
+    """One generation request.  ``arrival`` is the scheduler tick at which
+    the request becomes admissible (``run``'s synthetic-traffic clock).
+    Identity semantics (``eq=False``): the ndarray prompt makes generated
+    equality ambiguous, and two requests are never "the same" anyway."""
+    rid: int
+    prompt: np.ndarray                 # (P,) int32 token ids
+    max_new_tokens: int
+    arrival: int = 0
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: List[int]                  # all emitted tokens, EOS included
+    reason: str                        # 'eos' | 'length'
+    admitted_step: int
+    finished_step: int
+    slot: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotEvent:
+    """Replay-log entry; the property suite audits slot lifecycle on it."""
+    kind: str                          # 'admit' | 'finish'
+    step: int
+    rid: int
+    slot: int
+    reason: str = ""
+
+
+@dataclasses.dataclass
+class _Active:
+    rid: int
+    last_token: int
+    emitted: List[int]
+    max_new_tokens: int
+    admitted_step: int
+
+
+def policy_tile_grids(cfg: ModelConfig) -> List[Tuple[int, int]]:
+    """Distinct tile grids any analog rule of ``cfg`` could route through
+    (mirrors the training driver's mesh-composition pre-check)."""
+    grids = set()
+    pol = getattr(cfg, "analog_policy", None)
+    if pol is not None:
+        for rule in pol.rules:
+            if rule.cfg is not None and rule.cfg.tile_grid is not None:
+                grids.add(rule.cfg.tile_grid)
+    c = getattr(cfg, "analog", None)
+    if c is not None and c.tile_grid is not None:
+        grids.add(c.tile_grid)
+    return sorted(grids)
+
+
+def validate_serve_plan(cfg: ModelConfig,
+                        plan: shd.MeshPlan,
+                        n_devices: Optional[int] = None) -> shd.MeshPlan:
+    """Validate a serve mesh plan, including composition with every tile
+    grid the config's analog policy could place (``MeshPlan.validate``:
+    data x sharded-tile rejected, unplaceable grids collapse to the serial
+    oracle and compose fine)."""
+    if n_devices is None:
+        n_devices = jax.device_count()
+    plan.validate(n_devices)
+    for grid in policy_tile_grids(cfg):
+        shd.MeshPlan(pipe=plan.pipe, data=plan.data,
+                     tile=grid).validate(n_devices)
+    return plan
+
+
+class ContinuousBatchingScheduler:
+    """Slot-rotating batched decode over a fixed cache pool.
+
+    The two model-touching steps are isolated in :meth:`_admit_slot`
+    (prefill one request, write its cache into a slot) and
+    :meth:`_decode_tokens` (one batched ``serve_step`` + greedy argmax);
+    everything else is pure slot/queue bookkeeping, which the property
+    suite exercises against a stub engine by overriding exactly those two
+    methods.
+    """
+
+    def __init__(self, params: Any, cfg: ModelConfig, *, slots: int,
+                 max_seq: int, eos_id: Optional[int] = None,
+                 akey: Optional[Array] = None,
+                 plan: Optional[shd.MeshPlan] = None):
+        self._init_bookkeeping(slots, eos_id)
+        if cfg.encoder_layers > 0:
+            raise NotImplementedError(
+                "continuous batching does not thread encoder memories yet; "
+                "enc-dec models serve through the static "
+                "engine.greedy_generate path")
+        self.params = params
+        self.cfg = cfg
+        self.max_seq = max_seq
+        self.akey = akey
+
+        self._mesh = None
+        self._rules: Optional[shd.Rules] = None
+        if plan is not None:
+            validate_serve_plan(cfg, plan)
+            if plan.n_placed(jax.device_count()) > 1:
+                self._mesh = plan.build(jax.devices())
+                self._rules = shd.ddp_rules()
+
+        # The slot pool is built lazily from the first prefill's cache
+        # pytree (zeros broadcast over the slot axis) rather than from
+        # ``engine.init_cache``: the model decides cache leaf dtypes (e.g.
+        # an f32 analog policy over a bf16 act config), and the pool must
+        # match them exactly for slot insertion and the oracle comparison.
+        self._cache: Optional[Dict[str, Array]] = None
+        self._jit_prefill = jax.jit(self._prefill_impl)
+        # the carried cache is donated: steady-state decode keeps one live
+        # cache buffer, never two (pinned by the audit target's donation
+        # program)
+        self._jit_decode = jax.jit(self._decode_impl, donate_argnums=(2,))
+        self._jit_insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+
+    def _init_bookkeeping(self, slots: int,
+                          eos_id: Optional[int]) -> None:
+        """Queue/slot state only — a stub-engine subclass (the property
+        suite) calls this and overrides the two model-touching methods."""
+        if slots < 1:
+            raise ValueError(f"need at least one cache slot, got {slots}")
+        self.slots = slots
+        self.eos_id = eos_id
+        self.queue: "deque[Request]" = deque()
+        self.events: List[SlotEvent] = []
+        self.completions: List[Completion] = []
+        self._active: List[Optional[_Active]] = [None] * slots
+        self._step = 0                 # global decode-step counter (keys)
+        self._tick = 0                 # scheduler ticks (arrival clock)
+
+    # --- model-touching internals (override points for the stub engine) --
+
+    def _prefill_impl(self, params, prompt, akey):
+        logits, cache = engine.prefill(params, prompt, self.cfg,
+                                       max_seq=self.max_seq, akey=akey)
+        return jnp.argmax(logits[:, -1], axis=-1), cache
+
+    def _decode_impl(self, params, tokens_t, cache, akey):
+        logits, cache = engine.serve_step(params, tokens_t, cache,
+                                          self.cfg, akey=akey)
+        return jnp.argmax(logits[:, -1], axis=-1), cache
+
+    def _insert_impl(self, cache, cache1, slot):
+        """Write a batch-1 prefill cache into slot ``slot`` of the pool.
+
+        Every cache leaf carries batch on axis 1 under a leading layers
+        axis, except the 1-D ``pos`` vector (batch on axis 0) — see
+        ``engine.init_cache``.
+        """
+        def put(dst, src):
+            if dst.ndim == 1:          # pos: (batch,)
+                return jax.lax.dynamic_update_index_in_dim(
+                    dst, src[0], slot, 0)
+            return jax.lax.dynamic_update_index_in_dim(
+                dst, src[:, 0], slot, 1)
+
+        return {k: put(cache[k], cache1[k]) for k in cache}
+
+    def _ensure_pool(self, cache1: Dict[str, Array]) -> None:
+        """Materialise the slot pool from a batch-1 prefill cache tree."""
+        if self._cache is not None:
+            return
+
+        def pooled(src):
+            if src.ndim == 1:          # pos: (batch,)
+                shape = (self.slots,)
+            else:                      # (layers, batch, ...)
+                shape = (src.shape[0], self.slots) + src.shape[2:]
+            return jnp.zeros(shape, src.dtype)
+
+        cache = jax.jit(lambda t: jax.tree_util.tree_map(pooled, t))(cache1)
+        if self._mesh is not None:
+            shardings = shd.tree_shardings(engine.cache_axes(self.cfg),
+                                           self._mesh, self._rules,
+                                           like=cache)
+            cache = jax.device_put(cache, shardings)
+        self._cache = cache
+
+    def _ctx(self):
+        if self._mesh is None:
+            return _nullctx()
+        return shd.use_sharding(self._mesh, self._rules)
+
+    def _admit_slot(self, req: Request, slot: int) -> int:
+        """Prefill ``req`` and park its cache in ``slot``; first token."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        with self._ctx():
+            first, cache1 = self._jit_prefill(self.params, prompt, self.akey)
+            self._ensure_pool(cache1)
+            self._cache = self._jit_insert(self._cache, cache1,
+                                           jnp.int32(slot))
+        return int(first[0])
+
+    def _decode_tokens(self, last_tokens: np.ndarray) -> np.ndarray:
+        """One batched decode step; per-slot greedy next tokens (slots,)."""
+        toks = jnp.asarray(last_tokens, jnp.int32)[:, None]
+        step_key = engine.decode_step_key(self.akey, self._step)
+        with self._ctx():
+            nxt, self._cache = self._jit_decode(self.params, toks,
+                                                self._cache, step_key)
+        return np.asarray(nxt)
+
+    # --- queue / slot bookkeeping ----------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def submit_many(self, reqs: Sequence[Request]) -> None:
+        for r in reqs:
+            self.submit(r)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(a is None for a in self._active)
+
+    @property
+    def n_free(self) -> int:
+        return sum(a is None for a in self._active)
+
+    def _finish(self, slot: int, reason: str) -> Completion:
+        a = self._active[slot]
+        assert a is not None
+        comp = Completion(rid=a.rid, tokens=list(a.emitted), reason=reason,
+                          admitted_step=a.admitted_step,
+                          finished_step=self._tick, slot=slot)
+        self.events.append(SlotEvent("finish", self._tick, a.rid, slot,
+                                     reason))
+        self.completions.append(comp)
+        self._active[slot] = None
+        return comp
+
+    def _token_finishes(self, a: _Active, tok: int) -> Optional[str]:
+        if self.eos_id is not None and tok == self.eos_id:
+            return "eos"
+        if len(a.emitted) >= a.max_new_tokens:
+            return "length"
+        return None
+
+    def step(self) -> List[Completion]:
+        """One scheduler tick: admissions, then one batched decode step.
+
+        Returns the requests that finished during this tick (possibly at
+        admission: a one-token request, or a first token that is EOS).
+        """
+        finished: List[Completion] = []
+
+        # 1. admission: FIFO queue into lowest free slots; a request that
+        # completes at its first (prefill) token frees its slot for the
+        # next queued request within the same tick — no slot rides a tick
+        # empty while work is queued.
+        while self.queue and self.n_free > 0:
+            req = self.queue.popleft()
+            slot = next(i for i, a in enumerate(self._active) if a is None)
+            first = self._admit_slot(req, slot)
+            a = _Active(rid=req.rid, last_token=first, emitted=[first],
+                        max_new_tokens=max(1, req.max_new_tokens),
+                        admitted_step=self._tick)
+            self._active[slot] = a
+            self.events.append(SlotEvent("admit", self._tick, req.rid, slot))
+            reason = self._token_finishes(a, first)
+            if reason is not None:
+                finished.append(self._finish(slot, reason))
+
+        # 2. one batched decode step over the slot pool (free slots decode
+        # garbage rows that are never read — row independence makes them
+        # harmless, and the single fixed-shape dispatch is the point).
+        if any(a is not None for a in self._active):
+            last = np.asarray([a.last_token if a is not None else 0
+                               for a in self._active], np.int32)
+            nxt = self._decode_tokens(last)
+            self._step += 1
+            for slot, a in enumerate(self._active):
+                if a is None:
+                    continue
+                tok = int(nxt[slot])
+                a.last_token = tok
+                a.emitted.append(tok)
+                reason = self._token_finishes(a, tok)
+                if reason is not None:
+                    finished.append(self._finish(slot, reason))
+
+        self._tick += 1
+        return finished
+
+    def run(self, requests: Sequence[Request],
+            max_ticks: Optional[int] = None) -> List[Completion]:
+        """Drive a whole synthetic-traffic trace to completion.
+
+        Requests enter the admission queue at their ``arrival`` tick, in
+        the order given (FIFO among same-tick arrivals) — the run is a
+        pure function of (params, requests, slots, seed).
+        """
+        pending = deque(sorted(requests, key=lambda r: r.arrival))
+        done: List[Completion] = []
+        while pending or not self.idle:
+            while pending and pending[0].arrival <= self._tick:
+                self.submit(pending.popleft())
+            done.extend(self.step())
+            if max_ticks is not None and self._tick >= max_ticks:
+                break
+        return done
+
+
+class _nullctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

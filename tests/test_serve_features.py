@@ -1,6 +1,10 @@
 """Serving-path features: int8 KV cache quantisation, a2a MoE equivalence
 (in-process single-device parts; multi-device a2a lives in
-tests/test_distributed.py)."""
+tests/test_distributed.py), and analog-decode parity — the ``noise_free``
+preset must make analog prefill/serve_step/greedy_generate **bit-exact**
+against the digital path (seeded maps program the array exactly; with
+noise, bounds, variations and management all off the analog read reduces
+to the same einsum)."""
 
 import dataclasses
 
@@ -9,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analog import presets
 from repro.configs import registry
 from repro.models import attention, transformer
 from repro.serve import engine
@@ -54,6 +59,73 @@ def test_moe_a2a_falls_back_without_mesh():
                           cfg.act_dtype)
     y, aux = moe.apply(p, x, cfg)
     assert y.shape == x.shape
+
+
+def _parity_pair(arch="deepseek_7b"):
+    """(digital, noise-free analog) params over the same init key; f32 so
+    bit-exactness is meaningful (analog tiles simulate in f32)."""
+    cfg = registry.get_config(arch, smoke=True)
+    cfg = dataclasses.replace(cfg, param_dtype=jnp.float32,
+                              act_dtype=jnp.float32, remat=False)
+    acfg = dataclasses.replace(
+        cfg, analog_policy=presets.parse_policy("noise_free"))
+    pd, _ = transformer.init_lm(jax.random.key(0), cfg)
+    pa, _ = transformer.init_lm(jax.random.key(0), acfg)
+    return (pd, cfg), (pa, acfg)
+
+
+def test_analog_noise_free_serve_step_bitexact():
+    """Analog decode under the noise-free preset == digital, bitwise —
+    the unembed/adapter key plumbing and the per-layer fold-in schedule
+    route every converted site, and none of them perturbs the math."""
+    (pd, cfg), (pa, acfg) = _parity_pair()
+    akey = jax.random.key(7)
+    toks = jax.random.randint(jax.random.key(1), (2, 8), 0, cfg.vocab)
+    ld, cd = engine.prefill(pd, toks, cfg, max_seq=16)
+    la, ca = engine.prefill(pa, toks, acfg, max_seq=16, akey=akey)
+    assert jnp.array_equal(ld, la)
+    ld2, _ = engine.serve_step(pd, toks[:, -1:], cd, cfg)
+    la2, _ = engine.serve_step(pa, toks[:, -1:], ca, acfg, akey=akey)
+    assert jnp.array_equal(ld2, la2)
+
+
+def test_analog_noise_free_greedy_generate_token_exact():
+    """The full static decode loop (prefill + scanned serve_step with the
+    per-step ``decode_step_key`` schedule) emits identical tokens."""
+    (pd, cfg), (pa, acfg) = _parity_pair()
+    toks = jax.random.randint(jax.random.key(2), (2, 6), 0, cfg.vocab)
+    od, _ = engine.greedy_generate(pd, toks, cfg, n_steps=5, max_seq=16)
+    oa, _ = engine.greedy_generate(pa, toks, acfg, n_steps=5, max_seq=16,
+                                   akey=jax.random.key(7))
+    assert jnp.array_equal(od, oa)
+
+
+def test_analog_serve_requires_key():
+    """Analog params without ``akey`` fail loudly at the first read (noisy
+    configs draw physical noise; the engine never invents a key)."""
+    _, (pa, acfg) = _parity_pair()
+    toks = jnp.zeros((1, 4), jnp.int32)
+    with pytest.raises(ValueError, match="PRNG key"):
+        engine.prefill(pa, toks, acfg, max_seq=16)
+
+
+def test_analog_noisy_decode_reproducible_not_degenerate():
+    """A *noisy* policy (lm_managed) is key-reproducible: same akey ->
+    identical logits; read noise actually perturbs vs digital."""
+    cfg = registry.get_config("deepseek_7b", smoke=True)
+    cfg = dataclasses.replace(cfg, param_dtype=jnp.float32,
+                              act_dtype=jnp.float32, remat=False)
+    acfg = dataclasses.replace(
+        cfg, analog_policy=presets.parse_policy("lm_managed"))
+    pd, _ = transformer.init_lm(jax.random.key(0), cfg)
+    pa, _ = transformer.init_lm(jax.random.key(0), acfg)
+    toks = jax.random.randint(jax.random.key(1), (1, 6), 0, cfg.vocab)
+    akey = jax.random.key(9)
+    l1, _ = engine.prefill(pa, toks, acfg, max_seq=16, akey=akey)
+    l2, _ = engine.prefill(pa, toks, acfg, max_seq=16, akey=akey)
+    ld, _ = engine.prefill(pd, toks, cfg, max_seq=16)
+    assert jnp.array_equal(l1, l2)
+    assert not jnp.array_equal(l1, ld)
 
 
 def test_cache_axes_matches_init_cache():
