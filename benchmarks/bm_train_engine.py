@@ -282,6 +282,86 @@ def bench_conv_stream(chunks=(None, 64, 256, 1024), batches=(8, 32),
 
 
 # ---------------------------------------------------------------------------
+# Fused backward+update: one launch per analog layer vs separate cycles
+# ---------------------------------------------------------------------------
+
+def bench_fused(batches=(8, 32), steps=8):
+    """LeNet analog train-step sweep: the fused backward+update megakernel
+    (``fuse_bwd_update=true`` — ONE Pallas launch per analog layer for the
+    transpose read + pulse update) vs the separate-launch cycles.
+
+    Three measurements per batch and variant:
+
+    * steps/s — timed post-compile (on CPU both variants execute the
+      kernels in interpret mode, so the architecture-level metrics below
+      are the headline off-TPU);
+    * launches/step — Pallas launch count of the traced step program
+      (``repro.analysis.jaxpr_audit``), the quantity the audit gate pins;
+    * temp bytes — XLA buffer-assignment peak live intermediates: the
+      fused variant never materializes the pulse-stream tensors in HBM.
+
+    Training is bit-identical between the variants
+    (tests/test_bwd_update_fused.py), so the sweep trades nothing.
+
+    Run:  PYTHONPATH=src python benchmarks/bm_train_engine.py --fused
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.analog.presets import parse_policy
+    from repro.analysis import jaxpr_audit
+    from repro.data import mnist
+    from repro.models import lenet
+    from repro.models.lenet import LeNetConfig
+    from repro.train import cnn
+
+    base = "managed:use_pallas=true:bm_mode=two_phase"
+    variants = {"separate": base, "fused": base + ":fuse_bwd_update=true"}
+    out = {"workload": {"model": "LeNet/MNIST analog "
+                                 "(NM + two-phase BM, pallas)",
+                        "batches": list(batches)},
+           "train_step": {}}
+
+    (xtr, ytr), _ = mnist.load_splits(max(batches) * 8, 128, seed=0,
+                                      verbose=False)
+    for batch in batches:
+        xb, yb = jnp.asarray(xtr[:batch]), jnp.asarray(ytr[:batch])
+        for label, policy in variants.items():
+            cfg = LeNetConfig.from_policy(parse_policy(policy))
+            step, opt = cnn.make_train_step(cfg)
+            params = lenet.init(jax.random.key(0), cfg)
+            opt_state = opt.init(params)
+            key = jax.random.key(1)
+            rep = jaxpr_audit.audit_fn(step, params, opt_state, xb, yb,
+                                       key).to_json()
+            launches = sum(rep["launches"].values())
+            temp = _temp_bytes(step, params, opt_state, xb, yb, key)
+            params, opt_state = step(params, opt_state, xb, yb, key)
+            jax.block_until_ready(params["W4"].w)
+            t0 = time.time()
+            for s in range(steps):
+                params, opt_state = step(params, opt_state, xb, yb,
+                                         jax.random.fold_in(key, s))
+            jax.block_until_ready(params["W4"].w)
+            rate = steps / (time.time() - t0)
+            tag = f"batch{batch}_{label}"
+            out["train_step"][tag] = {
+                "steps_per_sec": rate, "launches_per_step": launches,
+                "launches_by_kind": rep["launches"], "temp_bytes": temp}
+            print(f"[fused] batch {batch:3d} {label:9s}: {rate:6.2f} "
+                  f"steps/s  {launches:2d} launches/step  "
+                  f"temp {temp / 1e6:8.2f} MB", flush=True)
+        sep = out["train_step"][f"batch{batch}_separate"]
+        fus = out["train_step"][f"batch{batch}_fused"]
+        ok = fus["launches_per_step"] < sep["launches_per_step"]
+        print(f"[fused] batch {batch:3d}: launches "
+              f"{sep['launches_per_step']} -> {fus['launches_per_step']}, "
+              f"steps/s x{fus['steps_per_sec'] / sep['steps_per_sec']:.2f}, "
+              f"temp x{fus['temp_bytes'] / max(1, sep['temp_bytes']):.2f} "
+              f"-> {'PASS' if ok else 'FAIL'}", flush=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Managed-read microbenchmark: physical-read launch counts + steps/sec
 # ---------------------------------------------------------------------------
 
@@ -448,7 +528,25 @@ def main():
                     help="only run the streaming-conv sweep: steps/s and "
                          "peak live (temp) bytes vs conv_stream_chunk/"
                          "update_chunk and batch (docs/benchmarks.md)")
+    ap.add_argument("--fused", action="store_true",
+                    help="only run the fused backward+update sweep: "
+                         "steps/s, Pallas launches/step and peak live "
+                         "(temp) bytes, fused megakernel vs the "
+                         "separate-launch cycles (docs/benchmarks.md)")
     args = ap.parse_args()
+
+    if args.fused:
+        out = {"fused_bwd_update": bench_fused()}
+        if os.path.exists(RESULTS):
+            with open(RESULTS) as f:
+                prior = json.load(f)
+            prior["fused_bwd_update"] = out["fused_bwd_update"]
+            out = prior
+        os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+        with open(RESULTS, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"[bench] wrote {RESULTS}")
+        return
 
     if args.conv_stream:
         out = {"conv_stream": bench_conv_stream()}

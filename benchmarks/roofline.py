@@ -115,6 +115,7 @@ def analyse(rec: Dict) -> Optional[Dict]:
     return {
         "arch": rec["arch"], "cell": rec["cell"],
         "mesh": rec["mesh"], "analog": rec.get("analog", False),
+        "variant": rec.get("variant", ""),
         "rules": rec.get("rules", "tp_fsdp"),
         "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
         "memory_fused_s": t_mem_fused,
@@ -156,18 +157,19 @@ def load_all(pattern: str = "*.json") -> List[Dict]:
 
 
 def table(rows: List[Dict], fmt: str = "text") -> str:
-    hdr = ["arch", "cell", "mesh", "compute_s", "memory_s", "collective_s",
-           "bottleneck", "useful", "roofline%", "roof%fused"]
+    hdr = ["arch", "cell", "variant", "mesh", "compute_s", "memory_s",
+           "collective_s", "bottleneck", "useful", "roofline%", "roof%fused"]
     lines = []
     if fmt == "md":
         lines.append("| " + " | ".join(hdr) + " |")
         lines.append("|" + "---|" * len(hdr))
     else:
-        lines.append(f"{'arch':<22}{'cell':<13}{'mesh':<10}"
+        lines.append(f"{'arch':<22}{'cell':<13}{'variant':<10}{'mesh':<10}"
                      f"{'compute_s':>11}{'memory_s':>11}{'coll_s':>11}"
                      f"{'bound':<12}{'useful':>8}{'roof%':>7}{'fused%':>8}")
     for r in rows:
-        vals = [r["arch"], r["cell"], r["mesh"],
+        vals = [r["arch"], r["cell"], r.get("variant", "") or "-",
+                r["mesh"],
                 f"{r['compute_s']:.3e}", f"{r['memory_s']:.3e}",
                 f"{r['collective_s']:.3e}", r["bottleneck"],
                 f"{r['useful_ratio']:.2f}",
@@ -177,9 +179,10 @@ def table(rows: List[Dict], fmt: str = "text") -> str:
             lines.append("| " + " | ".join(vals) + " |")
         else:
             lines.append(f"{vals[0]:<22}{vals[1]:<13}{vals[2]:<10}"
-                         f"{vals[3]:>11}{vals[4]:>11}{vals[5]:>11}"
-                         f" {vals[6]:<11}{vals[7]:>8}{vals[8]:>7}"
-                         f"{vals[9]:>8}")
+                         f"{vals[3]:<10}"
+                         f"{vals[4]:>11}{vals[5]:>11}{vals[6]:>11}"
+                         f" {vals[7]:<11}{vals[8]:>8}{vals[9]:>7}"
+                         f"{vals[10]:>8}")
     return "\n".join(lines)
 
 

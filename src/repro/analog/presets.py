@@ -189,6 +189,8 @@ def describe_cfg(cfg: Optional[RPUConfig]) -> str:
         bits.append(f"chunk={cfg.update_chunk}")
     if cfg.use_pallas:
         bits.append("pallas")
+    if cfg.fuse_bwd_update:
+        bits.append("fused-bwd-upd")
     if cfg.seeded_maps:
         bits.append("seeded")
     return " ".join(bits)

@@ -24,7 +24,11 @@ import jax.numpy as jnp
 
 from repro.analysis.jaxpr_audit import audit_donation, audit_fn
 
-LENET_POLICY = "managed:use_pallas=true:bm_mode=two_phase"
+#: audited LeNet policy: fixed-latency managed reads AND the fused
+#: backward+update megakernel — each analog layer's whole backward
+#: cycle-pair is ONE ``bwd_update`` launch (pinned per layer below)
+LENET_POLICY = ("managed:use_pallas=true:bm_mode=two_phase"
+                ":fuse_bwd_update=true")
 LENET_BATCH = 8
 
 #: serving audit policy: the managed LM preset with the fixed-latency BM
@@ -103,6 +107,23 @@ def lenet_target() -> Dict[str, Any]:
                 lambda s, xv, k: fn(s, xv, k, mode=cfg.layer_mode(layer)),
                 state, layer_inputs[layer], _key_struct())
         out[f"read__{layer}"] = rep.to_json()
+
+    # Per-layer vjp: forward read + the fused backward+update — the
+    # PR 9 pin is exactly ONE ``bwd_update`` launch per analog layer
+    # (no separate transpose read, no pulse-counts launch).
+    for layer in lenet.LAYERS:
+        state = params[layer]
+        fn = apply_of[state.meta.kind]
+        mode = cfg.layer_mode(layer)
+
+        def cycle(s, xv, k, fn=fn, mode=mode):
+            return jnp.sum(fn(s, xv, k, mode=mode) ** 2)
+
+        jax.clear_caches()
+        with ops.launch_label(layer):
+            rep = audit_fn(jax.grad(cycle, argnums=(0, 1), allow_int=True),
+                           state, layer_inputs[layer], _key_struct())
+        out[f"bwd_update__{layer}"] = rep.to_json()
 
     jax.clear_caches()
     don = audit_donation(step, (params, opt_state, x, y, _key_struct()),

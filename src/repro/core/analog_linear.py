@@ -67,6 +67,22 @@ def _pulse_w_bar(cfg, w, maps, x, g, key, lr):
     return (w - new_w).astype(w.dtype)
 
 
+def _fuse_eligible(cfg: RPUConfig, w: Array) -> bool:
+    """Static routing decision for the fused backward+update launch."""
+    if not cfg.fuse_bwd_update:
+        return False
+    from repro.kernels.bwd_update_mvm import bwd_update_eligible
+    return bwd_update_eligible(cfg, w.shape)
+
+
+def _fused_bwd(cfg, w, maps, x, g, k_b, k_u, lr):
+    """Backward + update cycles in one Pallas launch — bit-identical to
+    ``_bwd_read`` + ``_pulse_w_bar`` (the separate-launch oracle)."""
+    x_bar, new_w = tile_lib.tile_backward_update(
+        w, maps, x, g, k_b, k_u, cfg, lr)
+    return x_bar, (w - new_w).astype(w.dtype)
+
+
 # --- materialized device maps ----------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -84,9 +100,12 @@ def _analog_mat_fwd(cfg, w, dw_up, dw_dn, bound, x, key, lr):
 def _analog_mat_bwd(cfg, res, g):
     w, dw_up, dw_dn, bound, x, key, lr = res
     _, k_b, k_u = _split3(key)
-    x_bar = _bwd_read(cfg, w, g, k_b)
     maps = tile_lib.DeviceMaps(dw_up=dw_up, dw_dn=dw_dn, bound=bound)
-    w_bar = _pulse_w_bar(cfg, w, maps, x, g, k_u, lr)
+    if _fuse_eligible(cfg, w):
+        x_bar, w_bar = _fused_bwd(cfg, w, maps, x, g, k_b, k_u, lr)
+    else:
+        x_bar = _bwd_read(cfg, w, g, k_b)
+        w_bar = _pulse_w_bar(cfg, w, maps, x, g, k_u, lr)
     zeros = jnp.zeros_like
     return (w_bar, zeros(dw_up), zeros(dw_dn), zeros(bound), x_bar,
             _float0(key), jnp.zeros_like(lr))
@@ -112,9 +131,12 @@ def _analog_seeded_fwd(cfg, w, seed, x, key, lr):
 def _analog_seeded_bwd(cfg, res, g):
     w, seed, x, key, lr = res
     _, k_b, k_u = _split3(key)
-    x_bar = _bwd_read(cfg, w, g, k_b)
     maps = sample_device_maps(seed, w.shape[0], w.shape[1], cfg)
-    w_bar = _pulse_w_bar(cfg, w, maps, x, g, k_u, lr)
+    if _fuse_eligible(cfg, w):
+        x_bar, w_bar = _fused_bwd(cfg, w, maps, x, g, k_b, k_u, lr)
+    else:
+        x_bar = _bwd_read(cfg, w, g, k_b)
+        w_bar = _pulse_w_bar(cfg, w, maps, x, g, k_u, lr)
     return (w_bar, _float0(seed), x_bar, _float0(key), jnp.zeros_like(lr))
 
 

@@ -422,6 +422,67 @@ def _stream_pulse_w_bar(cfg: RPUConfig, geom: ConvGeom, w, maps, x, g, k_u,
     return (w - new_w).astype(w.dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("d",))
+def _div_replicas(z: Array, d: int) -> Array:
+    """``z / d`` with the divisor baked in as a compile-time constant, so
+    the fused path rounds exactly like the oracle's in-loop division."""
+    return z / d
+
+
+def _conv_fuse_eligible(cfg: RPUConfig, geom: ConvGeom, w: Array) -> bool:
+    """Static routing decision for the fused conv backward+update launch."""
+    if not cfg.fuse_bwd_update:
+        return False
+    from repro.kernels.bwd_update_mvm import conv_bwd_update_eligible
+    return conv_bwd_update_eligible(cfg, geom, w.shape)
+
+
+def _fused_bwd_update(cfg: RPUConfig, geom: ConvGeom, w, maps, x, g, k_b,
+                      k_u, lr) -> Tuple[Array, Array]:
+    """Backward + update cycles in ONE Pallas launch
+    (``kernels.bwd_update_mvm.conv_bwd_update_pallas``) — bit-identical to
+    ``_stream_backward`` + ``_stream_pulse_w_bar`` (the separate-launch
+    oracle, kept for ineligible shapes and as the parity reference)."""
+    from repro.core import update as update_lib
+    from repro.kernels import ops as kops
+
+    xpad = _pad_volume(x, geom)
+    total = geom.positions
+    d = cfg.devices_per_weight
+    out_f = w.shape[0] // d
+    g2 = g.reshape(total, out_f)
+    delta_rep = tile_lib.replicate_delta(g2, d, rows_phys=w.shape[0])
+
+    um_maxima = None
+    if cfg.update_management:
+        x_max = jnp.max(window_absmax(xpad, geom))
+        if geom.bias:
+            x_max = jnp.maximum(x_max, jnp.asarray(1.0, x_max.dtype))
+        um_maxima = (x_max, jnp.max(jnp.abs(-g2)))
+
+    k_a, k_b2, k_c = jax.random.split(k_u, 3)
+    z, _sat, count_up, count_dn = kops.conv_bwd_update_mvm(
+        w, xpad, delta_rep, geom, k_b, k_a, k_b2, cfg, lr,
+        um_maxima=um_maxima)
+    if d > 1:
+        # jit so #_d is a trace-time constant: the oracle's division runs
+        # inside the streaming fori_loop trace, where XLA simplifies the
+        # constant-divisor division; an eager division (scalar lifted to an
+        # argument) rounds differently at the ulp level and would break
+        # bitwise parity with `_stream_backward`.
+        z = _div_replicas(z, d)
+    new_w = update_lib.finalize_counts(w, maps, count_up, count_dn, k_c, cfg)
+    w_bar = (w - new_w).astype(w.dtype)
+
+    xbar = jnp.zeros((geom.b, geom.h, geom.w, geom.c), g.dtype)
+    xbar = col2im_add(z[:, :geom.features], geom, 0, total, xbar)
+    (pt, _), (pl, _) = geom.pads
+    hp, wp = geom.h - sum(geom.pads[0]), geom.w - sum(geom.pads[1])
+    x_bar = jax.lax.slice(xbar, (0, pt, pl, 0),
+                          (geom.b, pt + hp, pl + wp, geom.c))
+    return x_bar, w_bar
+
+
 # --- seeded device maps ------------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
@@ -439,9 +500,13 @@ def _conv_stream_seeded_fwd(cfg, geom, w, seed, x, key, lr):
 def _conv_stream_seeded_bwd(cfg, geom, res, g):
     w, seed, x, key, lr = res
     _, k_b, k_u = analog_linear._split3(key)
-    x_bar = _stream_backward(cfg, geom, w, g, k_b)
     maps = sample_device_maps(seed, w.shape[0], w.shape[1], cfg)
-    w_bar = _stream_pulse_w_bar(cfg, geom, w, maps, x, g, k_u, lr)
+    if _conv_fuse_eligible(cfg, geom, w):
+        x_bar, w_bar = _fused_bwd_update(cfg, geom, w, maps, x, g, k_b,
+                                         k_u, lr)
+    else:
+        x_bar = _stream_backward(cfg, geom, w, g, k_b)
+        w_bar = _stream_pulse_w_bar(cfg, geom, w, maps, x, g, k_u, lr)
     return (w_bar, analog_linear._float0(seed), x_bar,
             analog_linear._float0(key), jnp.zeros_like(lr))
 
@@ -467,9 +532,13 @@ def _conv_stream_mat_fwd(cfg, geom, w, dw_up, dw_dn, bound, x, key, lr):
 def _conv_stream_mat_bwd(cfg, geom, res, g):
     w, dw_up, dw_dn, bound, x, key, lr = res
     _, k_b, k_u = analog_linear._split3(key)
-    x_bar = _stream_backward(cfg, geom, w, g, k_b)
     maps = tile_lib.DeviceMaps(dw_up=dw_up, dw_dn=dw_dn, bound=bound)
-    w_bar = _stream_pulse_w_bar(cfg, geom, w, maps, x, g, k_u, lr)
+    if _conv_fuse_eligible(cfg, geom, w):
+        x_bar, w_bar = _fused_bwd_update(cfg, geom, w, maps, x, g, k_b,
+                                         k_u, lr)
+    else:
+        x_bar = _stream_backward(cfg, geom, w, g, k_b)
+        w_bar = _stream_pulse_w_bar(cfg, geom, w, maps, x, g, k_u, lr)
     zeros = jnp.zeros_like
     return (w_bar, zeros(dw_up), zeros(dw_dn), zeros(bound), x_bar,
             analog_linear._float0(key), jnp.zeros_like(lr))

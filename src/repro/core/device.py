@@ -90,6 +90,15 @@ class RPUConfig:
     # None for fixed-latency BM; iterative BM's retry loop becomes
     # chunk-local (see with_streaming).
     conv_stream_chunk: Optional[int] = None
+    # --- fused backward+update launch (kernels/bwd_update_mvm.py) -----------
+    # One Pallas launch per layer runs the transpose (backward) read AND
+    # generates the signed pulse streams in VMEM, accumulating the integer
+    # coincidence counts on-chip; only ``update.finalize_counts`` (maps +
+    # ctoc + bound clip) stays digital.  Bit-exact vs the separate-launch
+    # path for the fixed-latency BM modes (off / two_phase); iterative BM
+    # keeps its multi-launch retry loop and ignores this flag.  Requires
+    # ``use_pallas``.
+    fuse_bwd_update: bool = False
     # --- implementation switches ---------------------------------------------
     seeded_maps: bool = False          # regenerate device maps from RNG (see module doc)
     dtype: jnp.dtype = jnp.float32     # simulation dtype for weights / MVMs

@@ -360,6 +360,42 @@ def tile_backward(state: TileState, delta: Array, key: jax.Array,
     return (z, sat) if return_sat else z
 
 
+def tile_backward_update(w: Array, maps: DeviceMaps, x: Array, g: Array,
+                         k_read: jax.Array, k_upd: jax.Array, cfg: RPUConfig,
+                         lr: float) -> Tuple[Array, Array]:
+    """Fused backward + update cycles in ONE Pallas launch
+    (``kernels/bwd_update_mvm.py``), for the fixed-latency managed modes.
+
+    Semantics are exactly ``tile_backward(state, g, k_read)`` followed by
+    ``tile_update(state, x, -g, k_upd)`` — same replicated-delta layout
+    (``replicate_delta``), same key discipline (``k_upd`` 3-way split into
+    A-stream/B-stream/ctoc keys), same shared ``update.finalize_counts``
+    digital epilogue — and the results are *bit-identical* to that pair;
+    the separate-launch path is kept as the parity oracle
+    (``tests/test_bwd_update_fused.py``).  Callers gate on
+    ``kernels.bwd_update_mvm.bwd_update_eligible``.
+
+    Takes raw ``(w, maps)`` rather than a ``TileState`` because the
+    autodiff wrappers (``core/analog_linear.py``) operate on the unpacked
+    physical arrays inside ``custom_vjp`` rules.
+
+    Returns ``(z, new_w)``: the replica-averaged transpose read
+    ``W_eff^T g`` and the post-update physical weights.
+    """
+    from repro.core import update as update_lib  # local import, avoids cycle
+    from repro.kernels import ops as kops
+
+    d = cfg.devices_per_weight
+    g_rep = replicate_delta(g, d, rows_phys=w.shape[0])
+    k_a, k_b, k_c = jax.random.split(k_upd, 3)
+    z, _sat, count_up, count_dn = kops.bwd_update_mvm(
+        w, x, g_rep, k_read, k_a, k_b, cfg, lr)
+    if d > 1:
+        z = z / d
+    new_w = update_lib.finalize_counts(w, maps, count_up, count_dn, k_c, cfg)
+    return z, new_w
+
+
 def tile_update(state: TileState, x: Array, delta: Array, key: jax.Array,
                 cfg: RPUConfig, lr: float) -> TileState:
     """Update cycle: stochastic-pulse outer-product update (Eq. 1).

@@ -1,0 +1,553 @@
+"""Pallas TPU kernel: fused backward+update for one analog dense layer.
+
+ONE launch runs the last two of the three RPU backprop cycles:
+
+* **transpose (backward) read** — the managed read of
+  ``kernels/managed_mvm.py`` restricted to a single contraction segment,
+  reusing the *same* shared body (``read_segment`` / ``select_and_average``)
+  with the same blocking (``bm = bk = 128``), padding and counter layout,
+  so ``z = f_mgmt(W^T delta)`` is bit-identical to the separate
+  ``managed_mvm_pallas(transpose=True)`` launch;
+* **stochastic-pulse update** — the signed pulse streams of
+  ``core/update.py`` are generated *inside VMEM* from the counter-offset
+  fastrng hash (never in HBM at any batch size) and contracted on the MXU
+  into the up/down coincidence counts, one ``bm``-row round per grid step —
+  the in-register analogue of the ``update_chunk`` streaming rounds, whose
+  bit-exactness PR 4 established: counts are integer-valued in f32, so any
+  accumulation blocking reproduces the unchunked contraction exactly.
+
+The kernel emits the raw integer counts; the caller finishes the cycle
+with the *shared* ``update.finalize_counts`` (device maps + cycle-to-cycle
+noise + per-device bound clip), which is what keeps the fused cycle
+bit-identical to every separate-launch update path (reference / pallas x
+chunked / unchunked) — only the shared finalize touches inexact arithmetic.
+
+Counter disciplines (all identical to the separate launches):
+
+* read noise at ``e = row * out_phys + col`` (``n_seg == 1``) from the
+  two seeds of the backward-read key;
+* A-streams (columns, from the activations) at
+  ``e = (row * BL + slot) * n_cols + col`` from ``k_a``;
+* B-streams (rows, from the negated replicated error) at
+  ``e = (row * BL + slot) * m_phys + row_drv`` from ``k_b``.
+
+The count matrices live in VMEM scratch for the whole grid
+(``(kp, n_p)`` f32 x2), so eligibility is VMEM-budget-gated
+(``bwd_update_eligible``) and callers fall back to the separate launches
+when a tile is too large — the fallback is the bit-exactness oracle, not a
+different numeric path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+from repro.kernels.managed_mvm import (read_segment, replica_cols,
+                                       select_and_average)
+from repro.kernels.noisy_mvm import _mix, _uniform24
+
+# Conservative per-launch VMEM budget (bytes) for the eligibility gate;
+# the dominating term is the two full (kp, n_p) count scratches.
+_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _pad128(v: int) -> int:
+    return -(-v // 128) * 128
+
+
+def bwd_update_eligible(cfg, w_shape: Tuple[int, int],
+                        bm: int = 128, bk: int = 128) -> bool:
+    """True when the fused backward+update kernel can take a dense layer's
+    backward pass: fusion requested, pallas on, fixed-latency BM, single
+    transpose-read segment, no sharded tile grid, counter-offset RNG, and
+    the count scratches + stream working set within the VMEM budget."""
+    if not (cfg.fuse_bwd_update and cfg.use_pallas and cfg.fast_rng):
+        return False
+    if cfg.tile_grid is not None and tuple(cfg.tile_grid) != (1, 1):
+        return False                      # grid cycles shard per sub-tile
+    if (cfg.bound_management and cfg.out_bound != float("inf")
+            and cfg.bm_mode != "two_phase"):
+        return False                      # iterative BM is multi-launch
+    m_phys, n_cols = w_shape
+    if m_phys > cfg.max_array_rows:
+        return False                      # transpose read would segment
+    kp = -(-m_phys // bk) * bk
+    n_p = _pad128(n_cols)
+    vmem = 4 * (2 * kp * n_p            # net/tot count scratches
+                + 3 * bm * n_p          # seg/acc1/acc2 read scratches
+                + 4 * bm * n_p          # x block + per-slot stream temps
+                + bk * n_p              # w block
+                + 2 * bm * bk)          # delta block + B-stream temp
+    return vmem <= _VMEM_BUDGET
+
+
+def _signed_stream(u, p, sgn):
+    """One pulse slot: fire with probability ``p``, polarity ``sgn``."""
+    return jnp.where(u < p, sgn, jnp.zeros_like(sgn))
+
+
+def _kernel(rseeds_ref, useeds_ref, gains_ref, nm_ref, d_ref, x_ref, w_ref,
+            y_ref, sat_ref, up_ref, dn_ref,
+            seg_ref, acc1_ref, acc2_ref, sat1_ref, sat2_ref,
+            net_ref, tot_ref, *,
+            nb: int, nk: int, sigma: float, alpha: float, bm: int, bk: int,
+            n_out: int, n_p: int, m_phys: int, batch: int, bl: int,
+            two_phase: bool, retry_scale: float):
+    i = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init_read():
+        seg_ref[...] = jnp.zeros_like(seg_ref)
+        acc1_ref[...] = jnp.zeros_like(acc1_ref)
+        acc2_ref[...] = jnp.zeros_like(acc2_ref)
+        sat1_ref[...] = jnp.zeros_like(sat1_ref)
+        sat2_ref[...] = jnp.zeros_like(sat2_ref)
+
+    @pl.when((i == 0) & (k == 0))
+    def _init_counts():
+        net_ref[...] = jnp.zeros_like(net_ref)
+        tot_ref[...] = jnp.zeros_like(tot_ref)
+
+    db = d_ref[...]                       # (bm, bk) replicated error block
+    wb = w_ref[...]                       # (bk, n_p) transpose-read weights
+    # --- backward-read contraction: same block order as managed_mvm ---------
+    seg_ref[...] += jax.lax.dot_general(
+        db, wb, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # --- update cycle: in-VMEM signed streams, one bm-row round per step ----
+    xb = x_ref[...]                       # (bm, n_p) activation columns
+    cx = gains_ref[0, 0]
+    cd = gains_ref[0, 1]
+    du = -db                              # update drives -delta (descent)
+    p_a = jnp.clip(jnp.abs(cx * xb), 0.0, 1.0)
+    sgn_a = jnp.sign(xb)
+    p_b = jnp.clip(jnp.abs(cd * du), 0.0, 1.0)
+    sgn_b = jnp.sign(du)
+
+    rows_a = (i * bm
+              + jax.lax.broadcasted_iota(jnp.uint32, (bm, n_p), 0))
+    cols_a = jax.lax.broadcasted_iota(jnp.uint32, (bm, n_p), 1)
+    rows_b = (i * bm
+              + jax.lax.broadcasted_iota(jnp.uint32, (bm, bk), 0))
+    cols_b = (k * bk
+              + jax.lax.broadcasted_iota(jnp.uint32, (bm, bk), 1))
+    seed_a = _mix(useeds_ref[0, 0])
+    seed_b = _mix(useeds_ref[0, 1])
+
+    net = jnp.zeros((bk, n_p), jnp.float32)
+    tot = jnp.zeros((bk, n_p), jnp.float32)
+    for slot in range(bl):                # static BL-slot loop, in-register
+        e_a = ((rows_a * np.uint32(bl) + np.uint32(slot))
+               * np.uint32(n_out & 0xFFFFFFFF) + cols_a)
+        a_s = _signed_stream(_uniform24(_mix(e_a ^ seed_a)), p_a, sgn_a)
+        e_b = ((rows_b * np.uint32(bl) + np.uint32(slot))
+               * np.uint32(m_phys & 0xFFFFFFFF) + cols_b)
+        b_s = _signed_stream(_uniform24(_mix(e_b ^ seed_b)), p_b, sgn_b)
+        net += jax.lax.dot_general(
+            b_s, a_s, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        tot += jax.lax.dot_general(
+            jnp.abs(b_s), jnp.abs(a_s), (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    idx = (pl.dslice(k * bk, bk), slice(None))
+    pl.store(net_ref, idx, pl.load(net_ref, idx) + net)
+    pl.store(tot_ref, idx, pl.load(tot_ref, idx) + tot)
+
+    # --- managed-read epilogue (shared body; n_seg == 1 => one boundary) ----
+    @pl.when(k == nk - 1)
+    def _read_boundary():
+        s = nm_ref[...]                   # (bm, 1) per-vector digital scale
+        v1 = seg_ref[...] / s
+        o, valid = replica_cols(bm, n_p, n_out, n_p)
+        rows = (i * bm
+                + jax.lax.broadcasted_iota(jnp.uint32, (bm, n_p), 0))
+        e = rows * np.uint32(n_out & 0xFFFFFFFF) + o
+        n_total = (batch * n_out) & 0xFFFFFFFF
+
+        v_read, sat = read_segment(v1, rseeds_ref[0, 0], e, n_total, valid,
+                                   sigma, alpha)
+        sat1_ref[...] |= sat
+        acc1_ref[...] += v_read
+        if two_phase:
+            v_read, sat = read_segment(
+                v1 / np.float32(retry_scale), rseeds_ref[0, 1], e, n_total,
+                valid, sigma, alpha)
+            sat2_ref[...] |= sat
+            acc2_ref[...] += v_read
+
+    @pl.when(k == nk - 1)
+    def _finalize_read():
+        y, residual = select_and_average(
+            acc1_ref[...], acc2_ref[...], sat1_ref[...], sat2_ref[...],
+            nm_ref[...], two_phase=two_phase, retry_scale=retry_scale,
+            d_avg=1, out_f_p=n_p)
+        y_ref[...] = y.astype(y_ref.dtype)
+        sat_ref[...] = residual
+
+    @pl.when((i == nb - 1) & (k == nk - 1))
+    def _emit_counts():
+        net_all = net_ref[...]
+        tot_all = tot_ref[...]
+        up_ref[...] = 0.5 * (tot_all + net_all)
+        dn_ref[...] = 0.5 * (tot_all - net_all)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sigma", "alpha", "two_phase", "retry_scale", "bl",
+                     "bm", "bk", "interpret", "name"))
+def bwd_update_mvm_pallas(w: jax.Array, d2d: jax.Array, x2d: jax.Array,
+                          nm_s: jax.Array, read_seeds: jax.Array,
+                          upd_seeds: jax.Array, gains: jax.Array, *,
+                          sigma: float, alpha: float, two_phase: bool,
+                          retry_scale: float = 16.0, bl: int = 10,
+                          bm: int = 128, bk: int = 128,
+                          interpret: bool = False, name: str = "bwd_update"
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                     jax.Array]:
+    """Fused backward+update launch for one dense analog tile.
+
+    Args:
+      w: physical weights ``(m_phys, n_cols)`` (rows already #_d-replicated).
+      d2d: ``(B, m_phys)`` *replicated* error vectors (the transpose-read
+        input and, negated, the update's row drivers).
+      x2d: ``(B, n_cols)`` activation columns (the update's column drivers).
+      nm_s: ``(B, 1)`` per-vector digital NM scale of ``d2d`` (ones when NM
+        is off).
+      read_seeds: (2,) uint32 backward-read seeds (``managed_mvm``'s
+        discipline: split-of-``k_b`` when two-phase, else the same seed
+        twice).
+      upd_seeds: (2,) uint32 — A-stream (``k_a``) and B-stream (``k_b``)
+        seeds from the update key's 3-way split (``k_c`` stays with the
+        caller for ``update.finalize_counts``).
+      gains: (2,) f32 — ``(C_x, C_d)`` pulse gains from ``um_factors``.
+
+    Returns ``(z, residual_sat, count_up, count_dn)``: the managed transpose
+    read ``(B, n_cols)`` on *physical* columns (the caller divides by #_d),
+    its residual saturation ``(B,)``, and the integer coincidence counts
+    ``(m_phys, n_cols)`` ready for ``update.finalize_counts``.
+    """
+    m_phys, n_cols = w.shape
+    b = d2d.shape[0]
+    assert d2d.shape[1] == m_phys, (d2d.shape, w.shape)
+    assert x2d.shape == (b, n_cols), (x2d.shape, w.shape)
+
+    n_p = _pad128(n_cols)
+    kp = -(-m_phys // bk) * bk
+    bp = -(-b // bm) * bm
+    nb, nk = bp // bm, kp // bk
+
+    wpad = jnp.pad(w, ((0, kp - m_phys), (0, n_p - n_cols)))
+    dpad = jnp.pad(d2d, ((0, bp - b), (0, kp - m_phys)))
+    xpad = jnp.pad(x2d, ((0, bp - b), (0, n_p - n_cols)))
+    nm_pad = jnp.pad(nm_s.astype(jnp.float32), ((0, bp - b), (0, 0)),
+                     constant_values=1.0)
+
+    kern = functools.partial(
+        _kernel, nb=nb, nk=nk, sigma=sigma, alpha=alpha, bm=bm, bk=bk,
+        n_out=n_cols, n_p=n_p, m_phys=m_phys, batch=b, bl=bl,
+        two_phase=two_phase, retry_scale=retry_scale)
+
+    z, sat, up, dn = pl.pallas_call(
+        kern,
+        name=name,
+        grid=(nb, nk),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i, k: (0, 0)),      # read seeds
+            pl.BlockSpec((1, 2), lambda i, k: (0, 0)),      # update seeds
+            pl.BlockSpec((1, 2), lambda i, k: (0, 0)),      # (cx, cd)
+            pl.BlockSpec((bm, 1), lambda i, k: (i, 0)),     # nm scale
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),    # delta (read+B)
+            pl.BlockSpec((bm, n_p), lambda i, k: (i, 0)),   # x (A streams)
+            pl.BlockSpec((bk, n_p), lambda i, k: (k, 0)),   # w (transpose)
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, n_p), lambda i, k: (i, 0)),   # z
+            pl.BlockSpec((bm, 1), lambda i, k: (i, 0)),     # residual sat
+            pl.BlockSpec((kp, n_p), lambda i, k: (0, 0)),   # count_up
+            pl.BlockSpec((kp, n_p), lambda i, k: (0, 0)),   # count_dn
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, n_p), d2d.dtype),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((kp, n_p), jnp.float32),
+            jax.ShapeDtypeStruct((kp, n_p), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, n_p), jnp.float32),    # segment accumulator
+            pltpu.VMEM((bm, n_p), jnp.float32),    # read-1 accumulator
+            pltpu.VMEM((bm, n_p), jnp.float32),    # read-2 accumulator
+            pltpu.VMEM((bm, 1), jnp.int32),        # read-1 saturation
+            pltpu.VMEM((bm, 1), jnp.int32),        # read-2 saturation
+            pltpu.VMEM((kp, n_p), jnp.float32),    # net coincidence counts
+            pltpu.VMEM((kp, n_p), jnp.float32),    # total coincidence counts
+        ],
+        compiler_params=compat.compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(read_seeds.reshape(1, 2).astype(jnp.uint32),
+      upd_seeds.reshape(1, 2).astype(jnp.uint32),
+      gains.reshape(1, 2).astype(jnp.float32), nm_pad, dpad, xpad, wpad)
+    return (z[:b, :n_cols], sat[:b, 0] > 0,
+            up[:m_phys, :n_cols], dn[:m_phys, :n_cols])
+
+
+# ---------------------------------------------------------------------------
+# Conv variant: implicit-im2col fused backward+update
+# ---------------------------------------------------------------------------
+
+def conv_bwd_update_eligible(cfg, geom, w_shape: Tuple[int, int],
+                             bk: int = 128) -> bool:
+    """True when the fused conv backward+update kernel can take a streamed
+    conv layer's backward pass — the conv analogue of
+    :func:`bwd_update_eligible` (per-image patch tile + both count
+    scratches within the VMEM budget)."""
+    if not (cfg.fuse_bwd_update and cfg.use_pallas and cfg.fast_rng):
+        return False
+    if cfg.tile_grid is not None and tuple(cfg.tile_grid) != (1, 1):
+        return False
+    if (cfg.bound_management and cfg.out_bound != float("inf")
+            and cfg.bm_mode != "two_phase"):
+        return False
+    m_phys, n_cols = w_shape
+    if m_phys > cfg.max_array_rows:
+        return False                      # transpose read would segment
+    p_img = geom.oh * geom.ow
+    ppad = -(-p_img // 8) * 8
+    ftm = geom.features + (1 if geom.bias else 0)
+    fp = _pad128(ftm)
+    kp = -(-m_phys // bk) * bk
+    np_c = _pad128(n_cols)
+    vmem = 4 * (geom.h * geom.w * geom.c   # activation volume
+                + ppad * kp                # replicated delta rows
+                + kp * np_c                # weights
+                + 2 * kp * fp              # net/tot count scratches
+                + 3 * ppad * fp            # patch + per-slot A-stream temps
+                + 4 * ppad * np_c          # read working set
+                + 2 * ppad * kp)           # per-slot B-stream temps
+    return vmem <= _VMEM_BUDGET
+
+
+def _tap_to_channel_perm(geom) -> np.ndarray:
+    """Column permutation taking tap-major counts (``t * C + c``, bias
+    last) to the channel-major layout of the parameter matrix
+    (``c * kh*kw + t``, bias last) — an exact gather of integer counts."""
+    kk = geom.kh * geom.kw
+    perm = np.empty(geom.cols, np.int32)
+    for j in range(geom.c * kk):          # channel-major index
+        c, t = divmod(j, kk)
+        perm[j] = t * geom.c + c          # its tap-major position
+    if geom.bias:
+        perm[geom.c * kk] = geom.c * kk
+    return perm
+
+
+def _conv_kernel(rseeds_ref, useeds_ref, gains_ref, nm_ref, d_ref, x_ref,
+                 w_ref, y_ref, sat_ref, up_ref, dn_ref, net_ref, tot_ref, *,
+                 geom, p_img: int, ppad: int, fp: int, kp: int, np_c: int,
+                 m_phys: int, n_cols: int, total: int, bl: int, bk: int,
+                 sigma: float, alpha: float, two_phase: bool,
+                 retry_scale: float):
+    from repro.kernels.conv_mvm import assemble_patch
+
+    i = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init_counts():
+        net_ref[...] = jnp.zeros_like(net_ref)
+        tot_ref[...] = jnp.zeros_like(tot_ref)
+
+    db = d_ref[...]                       # (ppad, kp) replicated error rows
+    wb = w_ref[...]                       # (kp, np_c) channel-major weights
+    # --- transpose read: same bk-blocked contraction order as managed_mvm --
+    seg = jnp.zeros((ppad, np_c), jnp.float32)
+    for kc in range(kp // bk):
+        seg = seg + jax.lax.dot_general(
+            db[:, kc * bk:(kc + 1) * bk], wb[kc * bk:(kc + 1) * bk, :],
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    s = nm_ref[...]                       # (ppad, 1) digital NM scale
+    v1 = seg / s
+    o, valid = replica_cols(ppad, np_c, n_cols, np_c)
+    rows = (i * np.uint32(p_img)
+            + jax.lax.broadcasted_iota(jnp.uint32, (ppad, np_c), 0))
+    e = rows * np.uint32(n_cols & 0xFFFFFFFF) + o
+    n_total = (total * n_cols) & 0xFFFFFFFF
+
+    acc1, sat1 = read_segment(v1, rseeds_ref[0, 0], e, n_total, valid,
+                              sigma, alpha)
+    if two_phase:
+        acc2, sat2 = read_segment(v1 / np.float32(retry_scale),
+                                  rseeds_ref[0, 1], e, n_total, valid,
+                                  sigma, alpha)
+    else:
+        acc2, sat2 = acc1, sat1
+    y, residual = select_and_average(
+        acc1, acc2, sat1, sat2, s, two_phase=two_phase,
+        retry_scale=retry_scale, d_avg=1, out_f_p=np_c)
+    y_ref[...] = y.astype(y_ref.dtype)
+    sat_ref[...] = residual
+
+    # --- update cycle: streams over the implicitly assembled columns -------
+    patch = assemble_patch(x_ref[0], geom, p_img, ppad, fp)   # tap-major
+    cx = gains_ref[0, 0]
+    cd = gains_ref[0, 1]
+    du = -db
+    p_a = jnp.clip(jnp.abs(cx * patch), 0.0, 1.0)
+    sgn_a = jnp.sign(patch)
+    p_b = jnp.clip(jnp.abs(cd * du), 0.0, 1.0)
+    sgn_b = jnp.sign(du)
+
+    # A-stream Bernoulli counters index the *channel-major* column the
+    # reference gather materializes; remap the tap-major position q in
+    # register (bias-last maps to itself, padding columns never fire).
+    kk = np.uint32(geom.kh * geom.kw)
+    q = jax.lax.broadcasted_iota(jnp.uint32, (ppad, fp), 1)
+    t_q = q // np.uint32(geom.c)
+    c_q = q - t_q * np.uint32(geom.c)
+    col_cm = jnp.where(q < np.uint32(geom.c) * kk, c_q * kk + t_q, q)
+    rows_a = (i * np.uint32(p_img)
+              + jax.lax.broadcasted_iota(jnp.uint32, (ppad, fp), 0))
+    rows_b = (i * np.uint32(p_img)
+              + jax.lax.broadcasted_iota(jnp.uint32, (ppad, kp), 0))
+    cols_b = jax.lax.broadcasted_iota(jnp.uint32, (ppad, kp), 1)
+    seed_a = _mix(useeds_ref[0, 0])
+    seed_b = _mix(useeds_ref[0, 1])
+
+    net = jnp.zeros((kp, fp), jnp.float32)
+    tot = jnp.zeros((kp, fp), jnp.float32)
+    for slot in range(bl):
+        e_a = ((rows_a * np.uint32(bl) + np.uint32(slot))
+               * np.uint32(n_cols & 0xFFFFFFFF) + col_cm)
+        a_s = _signed_stream(_uniform24(_mix(e_a ^ seed_a)), p_a, sgn_a)
+        e_b = ((rows_b * np.uint32(bl) + np.uint32(slot))
+               * np.uint32(m_phys & 0xFFFFFFFF) + cols_b)
+        b_s = _signed_stream(_uniform24(_mix(e_b ^ seed_b)), p_b, sgn_b)
+        net += jax.lax.dot_general(
+            b_s, a_s, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        tot += jax.lax.dot_general(
+            jnp.abs(b_s), jnp.abs(a_s), (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    net_ref[...] += net
+    tot_ref[...] += tot
+
+    @pl.when(i == nb - 1)
+    def _emit_counts():
+        net_all = net_ref[...]
+        tot_all = tot_ref[...]
+        up_ref[...] = 0.5 * (tot_all + net_all)
+        dn_ref[...] = 0.5 * (tot_all - net_all)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("geom", "sigma", "alpha", "two_phase", "retry_scale",
+                     "bl", "bk", "interpret", "name"))
+def conv_bwd_update_pallas(w: jax.Array, xpad: jax.Array, delta_rep: jax.Array,
+                           nm_s: jax.Array, read_seeds: jax.Array,
+                           upd_seeds: jax.Array, gains: jax.Array, *, geom,
+                           sigma: float, alpha: float, two_phase: bool,
+                           retry_scale: float = 16.0, bl: int = 10,
+                           bk: int = 128, interpret: bool = False,
+                           name: str = "bwd_update_conv"
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                      jax.Array]:
+    """Fused backward+update launch for one streamed conv tile, one image
+    per grid step: the managed transpose read of the replicated
+    position-error rows AND the pulse streams over the on-chip-assembled
+    im2col columns, with the integer coincidence counts accumulated across
+    images in VMEM.
+
+    Args:
+      w: physical weights ``(m_phys, C*kh*kw [+1 bias])``, channel-major.
+      xpad: padded activation volume ``(B, H, W, C)`` (update columns).
+      delta_rep: ``(positions, m_phys)`` replicated error rows (positive —
+        the kernel negates them for the update's row drivers).
+      nm_s: ``(positions, 1)`` per-position digital NM scale of the rows.
+      read_seeds/upd_seeds/gains: as :func:`bwd_update_mvm_pallas`.
+
+    Returns ``(z, residual_sat, count_up, count_dn)``: the transpose read
+    ``(positions, cols)`` on physical columns plus its residual saturation,
+    and the counts ``(m_phys, cols)`` back in channel-major column order,
+    ready for ``update.finalize_counts``.
+    """
+    m_phys, n_cols = w.shape
+    assert n_cols == geom.cols, (w.shape, geom)
+    p_img = geom.oh * geom.ow
+    total = geom.b * p_img
+    assert delta_rep.shape == (total, m_phys), (delta_rep.shape, w.shape)
+    ppad = -(-p_img // 8) * 8
+    ftm = geom.features + (1 if geom.bias else 0)
+    fp = _pad128(ftm)
+    kp = -(-m_phys // bk) * bk
+    np_c = _pad128(n_cols)
+
+    wpad = jnp.pad(w, ((0, kp - m_phys), (0, np_c - n_cols)))
+    d_pad = jnp.pad(delta_rep.reshape(geom.b, p_img, m_phys),
+                    ((0, 0), (0, ppad - p_img), (0, kp - m_phys))
+                    ).reshape(geom.b * ppad, kp)
+    nm_pad = jnp.pad(nm_s.astype(jnp.float32).reshape(geom.b, p_img, 1),
+                     ((0, 0), (0, ppad - p_img), (0, 0)),
+                     constant_values=1.0).reshape(geom.b * ppad, 1)
+
+    kern = functools.partial(
+        _conv_kernel, geom=geom, p_img=p_img, ppad=ppad, fp=fp, kp=kp,
+        np_c=np_c, m_phys=m_phys, n_cols=n_cols, total=total, bl=bl, bk=bk,
+        sigma=sigma, alpha=alpha, two_phase=two_phase,
+        retry_scale=retry_scale)
+
+    z, sat, up, dn = pl.pallas_call(
+        kern,
+        name=name,
+        grid=(geom.b,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),            # read seeds
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),            # update seeds
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),            # (cx, cd)
+            pl.BlockSpec((ppad, 1), lambda i: (i, 0)),         # nm scale
+            pl.BlockSpec((ppad, kp), lambda i: (i, 0)),        # delta rows
+            pl.BlockSpec((1, geom.h, geom.w, geom.c),
+                         lambda i: (i, 0, 0, 0)),              # x image
+            pl.BlockSpec((kp, np_c), lambda i: (0, 0)),        # w
+        ],
+        out_specs=[
+            pl.BlockSpec((ppad, np_c), lambda i: (i, 0)),      # z
+            pl.BlockSpec((ppad, 1), lambda i: (i, 0)),         # residual sat
+            pl.BlockSpec((kp, fp), lambda i: (0, 0)),          # count_up
+            pl.BlockSpec((kp, fp), lambda i: (0, 0)),          # count_dn
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((geom.b * ppad, np_c), delta_rep.dtype),
+            jax.ShapeDtypeStruct((geom.b * ppad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((kp, fp), jnp.float32),
+            jax.ShapeDtypeStruct((kp, fp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((kp, fp), jnp.float32),     # net coincidence counts
+            pltpu.VMEM((kp, fp), jnp.float32),     # total coincidence counts
+        ],
+        compiler_params=compat.compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(read_seeds.reshape(1, 2).astype(jnp.uint32),
+      upd_seeds.reshape(1, 2).astype(jnp.uint32),
+      gains.reshape(1, 2).astype(jnp.float32), nm_pad, d_pad, xpad, wpad)
+
+    z = z.reshape(geom.b, ppad, np_c)[:, :p_img, :n_cols]
+    sat = sat.reshape(geom.b, ppad)[:, :p_img]
+    perm = _tap_to_channel_perm(geom)
+    return (z.reshape(total, n_cols), sat.reshape(total) > 0,
+            up[:m_phys, perm], dn[:m_phys, perm])

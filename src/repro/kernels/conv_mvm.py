@@ -73,15 +73,13 @@ def conv_kernel_eligible(cfg, geom, w_shape: Tuple[int, int]) -> bool:
     return vmem <= _VMEM_BUDGET
 
 
-def _kernel(seeds_ref, nm_ref, x_ref, w_ref, y_ref, sat_ref, *,
-            geom, p_img: int, ppad: int, ftm: int, fp: int, outp: int,
-            out_f: int, out_f_p: int, d_avg: int, out_phys: int,
-            total_rows: int, sigma: float, alpha: float, two_phase: bool,
-            retry_scale: float):
-    i = pl.program_id(0)
-    xb = x_ref[0]                                      # (H, W, C)
-
-    # Implicit im2col: statically unrolled tap slices -> tap-major tile.
+def assemble_patch(xb, geom, p_img: int, ppad: int, fp: int):
+    """Implicit im2col: one image's on-chip patch tile, assembled from the
+    ``kh*kw`` statically unrolled strided tap slices of the (H, W, C)
+    activation block.  Tap-major column order (``t * C + c``, bias-ones
+    last), zero-padded to ``(ppad, fp)`` — the single source of the
+    in-VMEM patch layout, shared by the managed conv read and the fused
+    conv backward+update kernels."""
     cols = []
     for ih in range(geom.kh):
         for iw in range(geom.kw):
@@ -95,7 +93,17 @@ def _kernel(seeds_ref, nm_ref, x_ref, w_ref, y_ref, sat_ref, *,
     if geom.bias:
         cols.append(jnp.ones((p_img, 1), xb.dtype))
     patch = jnp.concatenate(cols, axis=1)              # (P_img, ftm)
-    patch = jnp.pad(patch, ((0, ppad - p_img), (0, fp - ftm)))
+    ftm = patch.shape[1]
+    return jnp.pad(patch, ((0, ppad - p_img), (0, fp - ftm)))
+
+
+def _kernel(seeds_ref, nm_ref, x_ref, w_ref, y_ref, sat_ref, *,
+            geom, p_img: int, ppad: int, ftm: int, fp: int, outp: int,
+            out_f: int, out_f_p: int, d_avg: int, out_phys: int,
+            total_rows: int, sigma: float, alpha: float, two_phase: bool,
+            retry_scale: float):
+    i = pl.program_id(0)
+    patch = assemble_patch(x_ref[0], geom, p_img, ppad, fp)
 
     prod = jax.lax.dot_general(patch, w_ref[...], (((1,), (0,)), ((), ())),
                                preferred_element_type=jnp.float32)

@@ -190,6 +190,120 @@ def conv_managed_mvm(w: Array, xpad: Array, geom, nm_s: Array, key: Array,
         name=launch_name("managed_read_conv"))
 
 
+def bwd_update_mvm(w: Array, x: Array, g_rep: Array, read_key: Array,
+                   k_a: Array, k_b: Array, cfg: RPUConfig, lr: float
+                   ) -> Tuple[Array, Array, Array, Array]:
+    """ONE fused launch for the backward + update cycles of a dense tile
+    (``bwd_update_mvm_pallas``): the managed transpose read of ``g_rep``
+    AND the signed pulse streams + integer coincidence counts, without the
+    streams or the transpose-read intermediates ever reaching HBM.
+
+    Disciplines mirror the separate launches exactly so the fused result is
+    *bit-identical*: the read consumes ``read_key`` per :func:`managed_mvm`
+    (split when two-phase, same seed twice otherwise; NM is always active on
+    the backward cycle when ``cfg.noise_management``); the update's A/B
+    streams consume ``k_a``/``k_b`` from the caller's 3-way split of the
+    update key (``k_c`` stays with the caller for
+    ``update.finalize_counts``), with gains from the same ``um_factors``
+    call ``core.update.pulse_update`` makes.
+
+    ``g_rep``: (..., m_phys) *replicated* upstream gradient (positive —
+    the kernel negates it for the update's row drivers, matching the
+    reference's ``pulse_update(..., -g, ...)``).  ``x``: (..., n) update
+    column drivers.  Returns ``(z, residual_sat, count_up, count_dn)`` —
+    ``z`` on physical columns (caller divides by #_d), counts ready for
+    the shared digital finalize.
+    """
+    from repro.core import management
+    from repro.kernels.bwd_update_mvm import bwd_update_mvm_pallas
+
+    assert cfg.fast_rng, "fused backward+update generates streams on-chip " \
+                         "from the counter-hash PRNG (requires cfg.fast_rng)"
+    m_phys, n_cols = w.shape
+    use_bm = cfg.bound_management and cfg.out_bound != float("inf")
+    if use_bm and cfg.bm_mode != "two_phase":
+        raise ValueError(
+            "iterative BM cannot be fused into one launch; use "
+            "management.with_bound_management over noisy_mvm")
+
+    batch_shape = g_rep.shape[:-1]
+    d2d = g_rep.reshape(-1, m_phys)
+    x2d = x.reshape(-1, x.shape[-1])
+    # backward cycle: NM applies whenever enabled (management.with_management
+    # with backward=True), independent of nm_forward
+    nm_s = (management.nm_scale(d2d) if cfg.noise_management
+            else jnp.ones((d2d.shape[0], 1), d2d.dtype))
+    sigma = cfg.read_noise if cfg.noise_backward else 0.0
+    if use_bm:
+        k1, k2 = jax.random.split(read_key)
+        read_seeds = jnp.stack([fastrng.key_to_seed(k1),
+                                fastrng.key_to_seed(k2)])
+    else:
+        s1 = fastrng.key_to_seed(read_key)
+        read_seeds = jnp.stack([s1, s1])
+    upd_seeds = jnp.stack([fastrng.key_to_seed(k_a), fastrng.key_to_seed(k_b)])
+    cx, cd = management.um_factors(x2d, -d2d, cfg, lr)
+    gains = jnp.stack([cx, cd])
+
+    z2d, sat, up, dn = bwd_update_mvm_pallas(
+        w, d2d, x2d, nm_s, read_seeds, upd_seeds, gains,
+        sigma=float(sigma), alpha=float(cfg.out_bound), two_phase=use_bm,
+        retry_scale=float(management.TWO_PHASE_SCALE), bl=int(cfg.bl),
+        interpret=_interpret_default(), name=launch_name("bwd_update"))
+    return (z2d.reshape(*batch_shape, n_cols), sat.reshape(batch_shape),
+            up, dn)
+
+
+def conv_bwd_update_mvm(w: Array, xpad: Array, delta_rep: Array, geom,
+                        read_key: Array, k_a: Array, k_b: Array,
+                        cfg: RPUConfig, lr: float, um_maxima=None
+                        ) -> Tuple[Array, Array, Array, Array]:
+    """Fused backward+update launch for a streaming conv tile
+    (``conv_bwd_update_pallas``): the managed transpose read of the
+    replicated position-error rows AND the pulse streams over the
+    implicitly-assembled im2col columns, one image per grid step.
+
+    ``xpad``: padded activation volume (B, Hp, Wp, C) — the update's column
+    drivers are assembled in VMEM from it (never an HBM im2col).
+    ``delta_rep``: (positions, m_phys) replicated error rows.  ``um_maxima``
+    follows ``update.pulse_update_streamed`` (precomputed scalar extrema —
+    required under update management).  Key/seed discipline matches
+    :func:`bwd_update_mvm`.  Returns ``(z, residual_sat, count_up,
+    count_dn)`` with ``z`` (positions, cols) on physical columns.
+    """
+    from repro.core import management, update as update_lib
+    from repro.kernels.bwd_update_mvm import conv_bwd_update_pallas
+
+    assert cfg.fast_rng, "fused backward+update generates streams on-chip " \
+                         "from the counter-hash PRNG (requires cfg.fast_rng)"
+    use_bm = cfg.bound_management and cfg.out_bound != float("inf")
+    if use_bm and cfg.bm_mode != "two_phase":
+        raise ValueError(
+            "iterative BM cannot be fused into one launch; use "
+            "management.with_bound_management over noisy_mvm")
+    nm_s = (management.nm_scale(delta_rep) if cfg.noise_management
+            else jnp.ones((delta_rep.shape[0], 1), delta_rep.dtype))
+    sigma = cfg.read_noise if cfg.noise_backward else 0.0
+    if use_bm:
+        k1, k2 = jax.random.split(read_key)
+        read_seeds = jnp.stack([fastrng.key_to_seed(k1),
+                                fastrng.key_to_seed(k2)])
+    else:
+        s1 = fastrng.key_to_seed(read_key)
+        read_seeds = jnp.stack([s1, s1])
+    upd_seeds = jnp.stack([fastrng.key_to_seed(k_a), fastrng.key_to_seed(k_b)])
+    cx, cd = update_lib._um_from_maxima(um_maxima, cfg, lr)
+    gains = jnp.stack([jnp.asarray(cx, jnp.float32),
+                       jnp.asarray(cd, jnp.float32)])
+
+    return conv_bwd_update_pallas(
+        w, xpad, delta_rep, nm_s, read_seeds, upd_seeds, gains, geom=geom,
+        sigma=float(sigma), alpha=float(cfg.out_bound), two_phase=use_bm,
+        retry_scale=float(management.TWO_PHASE_SCALE), bl=int(cfg.bl),
+        interpret=_interpret_default(),
+        name=launch_name("bwd_update_conv"))
+
+
 def pulse_update_fused(w: Array, maps: DeviceMaps, streams_rows: Array,
                        streams_cols: Array, key: Array,
                        cfg: RPUConfig) -> Array:

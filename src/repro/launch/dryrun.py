@@ -147,6 +147,29 @@ def _v_bm2_noremat(cfg):
     return _v_noremat(_v_bm2(cfg))
 
 
+def _map_analog(cfg, f):
+    if cfg.analog is not None:
+        cfg = dataclasses.replace(cfg, analog=f(cfg.analog))
+    if cfg.analog_policy is not None:
+        cfg = dataclasses.replace(
+            cfg, analog_policy=cfg.analog_policy.map_configs(f))
+    return cfg
+
+
+def _v_pallas2p(cfg):
+    """Separate-launch baseline for the fused sweep: pallas kernels with
+    fixed-latency two-phase BM, backward + update as distinct launches."""
+    return _map_analog(cfg, lambda c: dataclasses.replace(
+        c, bm_mode="two_phase", use_pallas=True))
+
+
+def _v_fusedbwd(cfg):
+    """One-launch analog layers: backward transpose read + pulse update in
+    a single Pallas launch per layer (vs the `pallas2p` baseline)."""
+    return _map_analog(cfg, lambda c: dataclasses.replace(
+        c, bm_mode="two_phase", use_pallas=True, fuse_bwd_update=True))
+
+
 def _v_moe_a2a(cfg):
     if cfg.moe is None:
         return cfg
@@ -175,6 +198,8 @@ VARIANTS = {
     "kv8_nofsdp": (_v_kv8, _r_nofsdp),
     "bm2": (_v_bm2, None),
     "bm2_noremat": (_v_bm2_noremat, None),
+    "pallas2p": (_v_pallas2p, None),
+    "fusedbwd": (_v_fusedbwd, None),
     "moe_a2a": (_v_moe_a2a, None),
     "moe_a2a_cap10": (_v_moe_a2a_cap10, None),
     "rematdots": (_v_rematdots, None),

@@ -88,7 +88,8 @@ def _parse_tile_mesh(tile_mesh: Optional[str]):
 
 def _build_analog_policy(analog_policy: str, bm_mode: str,
                          use_pallas: bool, tile_mesh: Optional[str],
-                         update_chunk: Optional[int]):
+                         update_chunk: Optional[int],
+                         fuse_bwd_update: bool = False):
     """Resolve the per-layer policy for ``--analog-policy``.
 
     The spec takes a preset name (with optional ``:field=value``
@@ -112,13 +113,16 @@ def _build_analog_policy(analog_policy: str, bm_mode: str,
             c = dataclasses.replace(c, bm_mode=bm_mode)
         if use_pallas:
             c = dataclasses.replace(c, use_pallas=True)
+        if fuse_bwd_update:
+            c = dataclasses.replace(c, fuse_bwd_update=True)
         if update_chunk:
             c = c.with_streaming(update_chunk=update_chunk)
         if grid:
             c = c.with_tile_grid(*grid)
         return c
 
-    if bm_mode != "iterative" or use_pallas or update_chunk or grid:
+    if (bm_mode != "iterative" or use_pallas or fuse_bwd_update
+            or update_chunk or grid):
         pol = pol.map_configs(override)
     return pol
 
@@ -176,14 +180,19 @@ def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
           lr: float = 3e-4, log_every: int = 1, seed: int = 0,
           engine: str = "scan", scan_chunk: int = 10,
           bm_mode: str = "iterative", use_pallas: bool = False,
+          fuse_bwd_update: bool = False,
           tile_mesh: Optional[str] = None,
           update_chunk: Optional[int] = None,
           max_restarts: int = 0):
     import dataclasses
     cfg = registry.get_config(arch, smoke=smoke)
+    if fuse_bwd_update and not use_pallas and not analog_policy:
+        raise ValueError("--fuse-bwd-update requires --use-pallas (the "
+                         "fused backward+update cycle is a Pallas launch)")
     if analog_policy:
         pol = _build_analog_policy(analog_policy, bm_mode, use_pallas,
-                                   tile_mesh, update_chunk)
+                                   tile_mesh, update_chunk,
+                                   fuse_bwd_update=fuse_bwd_update)
         cfg = dataclasses.replace(cfg, analog_policy=pol,
                                   param_dtype=jnp.float32)
         analog = True
@@ -194,7 +203,8 @@ def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
         # analog_sgd — but now with the resolved table printed at startup.
         from repro.core.device import rpu_nm_bm_um_bl1
         rpu = dataclasses.replace(rpu_nm_bm_um_bl1(), bm_mode=bm_mode,
-                                  use_pallas=use_pallas)
+                                  use_pallas=use_pallas,
+                                  fuse_bwd_update=fuse_bwd_update)
         if update_chunk:
             rpu = rpu.with_streaming(update_chunk=update_chunk)
             print(f"[train] streaming update cycle: chunk={update_chunk} "
@@ -409,6 +419,14 @@ def main():
                          "modifiers in --analog-policy] route analog "
                          "reads/updates through the Pallas kernels (fused "
                          "managed read for two_phase/off BM)")
+    ap.add_argument("--fuse-bwd-update", action="store_true",
+                    help="[or ':fuse_bwd_update=true' rule modifiers in "
+                         "--analog-policy] fuse each analog layer's "
+                         "backward transpose read and stochastic-pulse "
+                         "update into ONE Pallas launch (requires "
+                         "--use-pallas + fast_rng and a fixed-latency BM "
+                         "mode; bit-identical to the separate-launch "
+                         "cycles, which remain the oracle)")
     ap.add_argument("--tile-mesh", type=str, default=None, metavar="R,C",
                     help="[deprecated: use ':tile_grid=RxC' rule "
                          "modifiers in --analog-policy] "
@@ -431,7 +449,9 @@ def main():
                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                 multi_pod=args.multi_pod, lr=args.lr, engine=args.engine,
                 scan_chunk=args.scan_chunk, bm_mode=args.bm_mode,
-                use_pallas=args.use_pallas, tile_mesh=args.tile_mesh,
+                use_pallas=args.use_pallas,
+                fuse_bwd_update=args.fuse_bwd_update,
+                tile_mesh=args.tile_mesh,
                 update_chunk=args.update_chunk,
                 max_restarts=args.max_restarts)
     print(f"[train] done; final loss {res['final_loss']:.4f}")
