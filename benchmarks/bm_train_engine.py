@@ -362,6 +362,117 @@ def bench_fused(batches=(8, 32), steps=8):
 
 
 # ---------------------------------------------------------------------------
+# Temporal weight reuse: analog LSTM train-step sweep (seq x chunk x fused)
+# ---------------------------------------------------------------------------
+
+def bench_lstm(seqs=(4, 8), epochs=2, batch=8):
+    """Analog LSTM (delayed-copy task) train-step sweep over sequence
+    length x ``time_chunk`` x fused backward+update.
+
+    Every timestep re-reads the same two gate tiles (wx, wh) and the
+    backward pass accumulates coincidence counts across the whole
+    unrolled sequence into ONE ``finalize_counts`` per tile
+    (docs/architecture.md §"Temporal weight reuse"), so all (chunk,
+    fused) variants train bit-identically (tests/test_recurrent.py) —
+    the sweep trades only compile shape and launch structure:
+
+    * steps/s — timed post-compile over scan-fused epochs (on CPU the
+      pallas variants execute in interpret mode, so the structural
+      metrics below are the headline off-TPU);
+    * launches/step — Pallas launch count of the traced step program
+      (``repro.analysis.jaxpr_audit``, trip-count weighted: one managed
+      read per gate-tile per timestep), the quantity the ``lstm_copy``
+      audit budget pins;
+    * temp bytes — XLA peak live intermediates of the jitted step: the
+      streamed counts carry (hidden-sized integers) replaces the
+      T-unrolled pulse-stream tensors.
+
+    ``time_chunk`` sweeps 1 (per-step bodies), 2, and T (whole sequence
+    in one inner scan); T = 2*seq_len + delay must be divisible, which
+    the defaults satisfy.
+
+    Run:  PYTHONPATH=src python benchmarks/bm_train_engine.py --lstm
+    """
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.analog.convert import convert_to_analog
+    from repro.analog.policy import AnalogPolicy, AnalogRule
+    from repro.analysis import jaxpr_audit
+    from repro.core.device import rpu_nm_bm
+    from repro.data import sequences
+    from repro.optim import optimizers
+    from repro.recurrent import model as seq_model
+    from repro.train import engine as eng
+
+    out = {"workload": {"model": "LSTM/copy-task analog "
+                                 "(NM + two-phase BM, pallas)",
+                        "batch": batch, "seqs": list(seqs)},
+           "train_step": {}}
+    n_train = batch * 4
+    for seq_len in seqs:
+        scfg = seq_model.SeqConfig(kind="lstm", seq_len=seq_len,
+                                   hidden=32, lr=0.05)
+        tok, tgt = sequences.copy_task(n_train, seq_len=seq_len,
+                                       delay=scfg.delay, vocab=scfg.vocab,
+                                       seed=0)
+        tok, tgt = jnp.asarray(tok), jnp.asarray(tgt)
+        for chunk in (1, 2, scfg.t_total):
+            for fused in (False, True):
+                rpu = dataclasses.replace(
+                    rpu_nm_bm(), bm_mode="two_phase", use_pallas=True,
+                    fuse_bwd_update=fused)
+                cfg = dataclasses.replace(scfg, time_chunk=chunk)
+                pol = AnalogPolicy(rules=(AnalogRule("*", rpu, "nm_bm"),))
+                params, axes = seq_model.init(jax.random.key(0), cfg)
+                params, _ = convert_to_analog(params, axes, pol,
+                                              key=jax.random.key(0))
+                opt = optimizers.mixed_analog(optimizers.sgd(cfg.lr))
+                opt_state = opt.init(params)
+                key = jax.random.key(1)
+
+                step = eng.make_seq_step_fn(cfg, opt)
+                rep = jaxpr_audit.audit_fn(
+                    step, params, opt_state, tok[:batch], tgt[:batch],
+                    key).to_json()
+                launches = sum(rep["launches"].values())
+                jstep = jax.jit(step)
+                temp = _temp_bytes(jstep, params, opt_state, tok[:batch],
+                                   tgt[:batch], key)
+
+                run_epoch = eng.make_seq_epoch_fn(cfg, opt, batch=batch)
+                k_data, k_train = jax.random.split(key)
+                spe = n_train // batch
+                params, opt_state = run_epoch(params, opt_state, tok, tgt,
+                                              k_data, k_train,
+                                              jnp.asarray(0))
+                jax.block_until_ready(params["cell"]["wx"].w)
+                t0 = time.time()
+                for e in range(1, epochs + 1):
+                    params, opt_state = run_epoch(params, opt_state, tok,
+                                                  tgt, k_data, k_train,
+                                                  jnp.asarray(e))
+                jax.block_until_ready(params["cell"]["wx"].w)
+                rate = epochs * spe / (time.time() - t0)
+                label = "fused" if fused else "separate"
+                tag = f"seq{seq_len}_chunk{chunk}_{label}"
+                out["train_step"][tag] = {
+                    "steps_per_sec": rate, "launches_per_step": launches,
+                    "launches_by_kind": rep["launches"], "temp_bytes": temp}
+                print(f"[lstm] seq {seq_len:2d} T {scfg.t_total:2d} "
+                      f"chunk {chunk:2d} {label:9s}: {rate:6.2f} steps/s  "
+                      f"{launches:3d} launches/step  "
+                      f"temp {temp / 1e6:8.2f} MB", flush=True)
+        sep = out["train_step"][f"seq{seq_len}_chunk1_separate"]
+        fus = out["train_step"][f"seq{seq_len}_chunk1_fused"]
+        ok = fus["launches_per_step"] < sep["launches_per_step"]
+        print(f"[lstm] seq {seq_len:2d}: launches "
+              f"{sep['launches_per_step']} -> {fus['launches_per_step']} "
+              f"(fused) -> {'PASS' if ok else 'FAIL'}", flush=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Managed-read microbenchmark: physical-read launch counts + steps/sec
 # ---------------------------------------------------------------------------
 
@@ -533,7 +644,25 @@ def main():
                          "steps/s, Pallas launches/step and peak live "
                          "(temp) bytes, fused megakernel vs the "
                          "separate-launch cycles (docs/benchmarks.md)")
+    ap.add_argument("--lstm", action="store_true",
+                    help="only run the temporal weight-reuse sweep: "
+                         "analog LSTM train step over seq-len x "
+                         "time_chunk x fused, steps/s + launches/step + "
+                         "peak live (temp) bytes (docs/benchmarks.md)")
     args = ap.parse_args()
+
+    if args.lstm:
+        out = {"lstm_temporal": bench_lstm()}
+        if os.path.exists(RESULTS):
+            with open(RESULTS) as f:
+                prior = json.load(f)
+            prior["lstm_temporal"] = out["lstm_temporal"]
+            out = prior
+        os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+        with open(RESULTS, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"[bench] wrote {RESULTS}")
+        return
 
     if args.fused:
         out = {"fused_bwd_update": bench_fused()}

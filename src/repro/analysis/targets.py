@@ -233,6 +233,62 @@ def lenet_tile_grid_target() -> Dict[str, Any]:
 
 
 # ---------------------------------------------------------------------------
+# Analog recurrent (LSTM copy-task) train step
+# ---------------------------------------------------------------------------
+
+#: audited recurrent policy: NM + fixed-latency BM (UM is structurally
+#: incompatible with temporal accumulation — the cell rejects it) with the
+#: fused per-timestep backward+update megakernel
+LSTM_POLICY = ("nm_bm:use_pallas=true:bm_mode=two_phase"
+               ":fuse_bwd_update=true")
+LSTM_BATCH = 8
+
+
+def lstm_copy_target() -> Dict[str, Any]:
+    """Scan-over-time analog LSTM train step on the copy task.
+
+    Pins the temporal weight-reuse invariants: the whole BPTT sweep is
+    lax.scan'd (launch counts stay flat in sequence length — per-timestep
+    launches live inside while-loop bodies and are counted once), the
+    update finalize runs ONCE per tile per step, and the fused config
+    carries the ``bwd_update`` megakernel per timestep-chunk instead of
+    separate transpose-read + counts launches.
+    """
+    from repro.analog.convert import convert_to_analog
+    from repro.analog.presets import parse_policy
+    from repro.optim import optimizers
+    from repro.recurrent import model as seq_model
+    from repro.train import engine
+
+    scfg = seq_model.SeqConfig(kind="lstm", hidden=32, seq_len=4, delay=2,
+                               time_chunk=2, lr=0.05)
+    pol = parse_policy(LSTM_POLICY)
+
+    def build(k):
+        p, a = seq_model.init(k, scfg)
+        p, _ = convert_to_analog(p, a, pol, key=k)
+        return p
+
+    params = jax.eval_shape(build, _key_struct())
+    opt = optimizers.mixed_analog(optimizers.sgd(scfg.lr))
+    opt_state = jax.eval_shape(opt.init, params)
+    step = engine.make_seq_step_fn(scfg, opt)
+    toks = _sds((LSTM_BATCH, scfg.t_total), jnp.int32)
+    tgts = _sds((LSTM_BATCH, scfg.t_total), jnp.int32)
+    out: Dict[str, Any] = {}
+
+    jax.clear_caches()
+    out["step"] = audit_fn(step, params, opt_state, toks, tgts,
+                           _key_struct()).to_json()
+
+    jax.clear_caches()
+    out["donation__step"] = audit_donation(
+        step, (params, opt_state, toks, tgts, _key_struct()),
+        donate_argnums=(0, 1)).to_json()
+    return out
+
+
+# ---------------------------------------------------------------------------
 # DeepSeek smoke LM step + serve decode
 # ---------------------------------------------------------------------------
 
@@ -322,6 +378,7 @@ def deepseek_smoke_serve_target() -> Dict[str, Any]:
 TARGETS: Dict[str, Callable[[], Dict[str, Any]]] = {
     "lenet": lenet_target,
     "lenet_tile_grid": lenet_tile_grid_target,
+    "lstm_copy": lstm_copy_target,
     "deepseek_smoke": deepseek_smoke_target,
     "deepseek_smoke_serve": deepseek_smoke_serve_target,
 }

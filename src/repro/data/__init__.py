@@ -1,1 +1,3 @@
-"""Data substrates: MNIST (real or synthetic) + LM token pipeline."""
+"""Data substrates: MNIST (real or synthetic), LM tokens, sequence tasks."""
+
+from repro.data.sequences import copy_task, one_hot_time_major  # noqa: F401

@@ -27,9 +27,18 @@ Counter disciplines (all identical to the separate launches):
 * read noise at ``e = row * out_phys + col`` (``n_seg == 1``) from the
   two seeds of the backward-read key;
 * A-streams (columns, from the activations) at
-  ``e = (row * BL + slot) * n_cols + col`` from ``k_a``;
+  ``e = ((row_offset + row) * BL + slot) * n_cols + col`` from ``k_a``;
 * B-streams (rows, from the negated replicated error) at
-  ``e = (row * BL + slot) * m_phys + row_drv`` from ``k_b``.
+  ``e = ((row_offset + row) * BL + slot) * m_phys + row_drv`` from ``k_b``.
+
+``row_offset`` is the streaming-chunk counter shift of
+``update.sample_signed_streams(..., row_offset=...)``: a launch over rows
+``[r0, r0 + B)`` of a larger logical update batch (e.g. one timestep chunk
+of a recurrent sequence, rows flattened timestep-major) draws exactly the
+row slice of the single-shot stream, so per-chunk counts accumulate to the
+unchunked contraction bit-for-bit.  It rides in the third word of the
+update-seed operand (a traced u32 — chunk loops derive it from the loop
+index).
 
 The count matrices live in VMEM scratch for the whole grid
 (``(kp, n_p)`` f32 x2), so eligibility is VMEM-budget-gated
@@ -134,11 +143,14 @@ def _kernel(rseeds_ref, useeds_ref, gains_ref, nm_ref, d_ref, x_ref, w_ref,
     p_b = jnp.clip(jnp.abs(cd * du), 0.0, 1.0)
     sgn_b = jnp.sign(du)
 
-    rows_a = (i * bm
-              + jax.lax.broadcasted_iota(jnp.uint32, (bm, n_p), 0))
+    row0 = useeds_ref[0, 2]               # streaming-chunk counter shift
+    rows_a = (row0
+              + (i * bm
+                 + jax.lax.broadcasted_iota(jnp.uint32, (bm, n_p), 0)))
     cols_a = jax.lax.broadcasted_iota(jnp.uint32, (bm, n_p), 1)
-    rows_b = (i * bm
-              + jax.lax.broadcasted_iota(jnp.uint32, (bm, bk), 0))
+    rows_b = (row0
+              + (i * bm
+                 + jax.lax.broadcasted_iota(jnp.uint32, (bm, bk), 0)))
     cols_b = (k * bk
               + jax.lax.broadcasted_iota(jnp.uint32, (bm, bk), 1))
     seed_a = _mix(useeds_ref[0, 0])
@@ -228,9 +240,11 @@ def bwd_update_mvm_pallas(w: jax.Array, d2d: jax.Array, x2d: jax.Array,
       read_seeds: (2,) uint32 backward-read seeds (``managed_mvm``'s
         discipline: split-of-``k_b`` when two-phase, else the same seed
         twice).
-      upd_seeds: (2,) uint32 — A-stream (``k_a``) and B-stream (``k_b``)
+      upd_seeds: (3,) uint32 — A-stream (``k_a``) and B-stream (``k_b``)
         seeds from the update key's 3-way split (``k_c`` stays with the
-        caller for ``update.finalize_counts``).
+        caller for ``update.finalize_counts``), plus the streaming-chunk
+        ``row_offset`` counter shift (0 for a single-shot update batch;
+        may be traced).
       gains: (2,) f32 — ``(C_x, C_d)`` pulse gains from ``um_factors``.
 
     Returns ``(z, residual_sat, count_up, count_dn)``: the managed transpose
@@ -265,7 +279,7 @@ def bwd_update_mvm_pallas(w: jax.Array, d2d: jax.Array, x2d: jax.Array,
         grid=(nb, nk),
         in_specs=[
             pl.BlockSpec((1, 2), lambda i, k: (0, 0)),      # read seeds
-            pl.BlockSpec((1, 2), lambda i, k: (0, 0)),      # update seeds
+            pl.BlockSpec((1, 3), lambda i, k: (0, 0)),      # upd seeds+off
             pl.BlockSpec((1, 2), lambda i, k: (0, 0)),      # (cx, cd)
             pl.BlockSpec((bm, 1), lambda i, k: (i, 0)),     # nm scale
             pl.BlockSpec((bm, bk), lambda i, k: (i, k)),    # delta (read+B)
@@ -297,7 +311,7 @@ def bwd_update_mvm_pallas(w: jax.Array, d2d: jax.Array, x2d: jax.Array,
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(read_seeds.reshape(1, 2).astype(jnp.uint32),
-      upd_seeds.reshape(1, 2).astype(jnp.uint32),
+      upd_seeds.reshape(1, 3).astype(jnp.uint32),
       gains.reshape(1, 2).astype(jnp.float32), nm_pad, dpad, xpad, wpad)
     return (z[:b, :n_cols], sat[:b, 0] > 0,
             up[:m_phys, :n_cols], dn[:m_phys, :n_cols])

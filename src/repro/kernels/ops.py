@@ -191,8 +191,8 @@ def conv_managed_mvm(w: Array, xpad: Array, geom, nm_s: Array, key: Array,
 
 
 def bwd_update_mvm(w: Array, x: Array, g_rep: Array, read_key: Array,
-                   k_a: Array, k_b: Array, cfg: RPUConfig, lr: float
-                   ) -> Tuple[Array, Array, Array, Array]:
+                   k_a: Array, k_b: Array, cfg: RPUConfig, lr: float,
+                   row_offset=None) -> Tuple[Array, Array, Array, Array]:
     """ONE fused launch for the backward + update cycles of a dense tile
     (``bwd_update_mvm_pallas``): the managed transpose read of ``g_rep``
     AND the signed pulse streams + integer coincidence counts, without the
@@ -213,6 +213,13 @@ def bwd_update_mvm(w: Array, x: Array, g_rep: Array, read_key: Array,
     column drivers.  Returns ``(z, residual_sat, count_up, count_dn)`` —
     ``z`` on physical columns (caller divides by #_d), counts ready for
     the shared digital finalize.
+
+    ``row_offset`` (may be traced) shifts the A/B stream counters by that
+    many logical update rows — the ``update.sample_signed_streams``
+    streaming-chunk discipline, so a launch over rows ``[r0, r0 + B)`` of a
+    larger update batch (one timestep chunk of a recurrent sequence) draws
+    the exact row slice of the single-shot streams and its counts
+    accumulate to the unchunked cycle bit-for-bit.
     """
     from repro.core import management
     from repro.kernels.bwd_update_mvm import bwd_update_mvm_pallas
@@ -241,7 +248,10 @@ def bwd_update_mvm(w: Array, x: Array, g_rep: Array, read_key: Array,
     else:
         s1 = fastrng.key_to_seed(read_key)
         read_seeds = jnp.stack([s1, s1])
-    upd_seeds = jnp.stack([fastrng.key_to_seed(k_a), fastrng.key_to_seed(k_b)])
+    off = (jnp.zeros((), jnp.uint32) if row_offset is None
+           else jnp.asarray(row_offset, jnp.uint32))
+    upd_seeds = jnp.stack([fastrng.key_to_seed(k_a),
+                           fastrng.key_to_seed(k_b), off])
     cx, cd = management.um_factors(x2d, -d2d, cfg, lr)
     gains = jnp.stack([cx, cd])
 

@@ -170,6 +170,18 @@ def _v_fusedbwd(cfg):
         c, bm_mode="two_phase", use_pallas=True, fuse_bwd_update=True))
 
 
+def _v_temporal(cfg):
+    """Temporal weight reuse on the SSM/recurrent scan path: UM off (it
+    needs global error extrema a streamed accumulation never
+    materializes), so the sequence-axis dense projections route through
+    ``repro.recurrent.temporal`` — one managed read per timestep,
+    coincidence counts accumulated across time, ONE finalize per train
+    step (vs the single-shot time-flattened update).  Meaningful for the
+    ssm/hybrid archs; elsewhere it only drops UM."""
+    return _map_analog(cfg, lambda c: dataclasses.replace(
+        c, update_management=False, bm_mode="two_phase", use_pallas=True))
+
+
 def _v_moe_a2a(cfg):
     if cfg.moe is None:
         return cfg
@@ -200,6 +212,7 @@ VARIANTS = {
     "bm2_noremat": (_v_bm2_noremat, None),
     "pallas2p": (_v_pallas2p, None),
     "fusedbwd": (_v_fusedbwd, None),
+    "temporal": (_v_temporal, None),
     "moe_a2a": (_v_moe_a2a, None),
     "moe_a2a_cap10": (_v_moe_a2a_cap10, None),
     "rematdots": (_v_rematdots, None),
@@ -285,6 +298,8 @@ def lower_cell(arch: str, cell: ShapeCell, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per program
+        cost = cost[0] if cost else None
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     from repro.analysis import hlo as hlo_analysis

@@ -173,6 +173,85 @@ def _reject_mesh_grid_conflict(cfg, mesh) -> None:
             "grids:\n  " + "\n  ".join(errors))
 
 
+def train_sequence(kind: str, *, steps: int, batch: int, seq: int,
+                   smoke: bool, analog: bool = False,
+                   analog_policy: Optional[str] = None, lr: float = 0.01,
+                   bm_mode: str = "iterative", use_pallas: bool = False,
+                   fuse_bwd_update: bool = False, time_chunk: int = 1,
+                   seed: int = 0, log_every: int = 1):
+    """Analog recurrent trainer: LSTM/GRU on the delayed-copy task.
+
+    ``--steps`` counts *epochs* over a fixed synthetic split (the copy
+    task is tiny); each epoch is one scan-over-steps dispatch whose every
+    step runs the cell's scan-over-time — temporal weight reuse on the
+    same tiles every timestep, one accumulated pulse update per sequence
+    batch (1806.00166's setting on this codebase's RPU substrate).
+    """
+    import dataclasses
+    from repro.analog import presets
+    from repro.analog.convert import convert_to_analog
+    from repro.analog.policy import AnalogPolicy, AnalogRule
+    from repro.core.device import rpu_nm_bm
+    from repro.data import sequences
+    from repro.optim import optimizers
+    from repro.recurrent import model as seq_model
+
+    seq_len = 4 if smoke else max(2, min(seq, 16))
+    scfg = seq_model.SeqConfig(kind=kind, seq_len=seq_len, lr=lr,
+                               hidden=16 if smoke else 32,
+                               time_chunk=time_chunk)
+    n_train = batch * (2 if smoke else 25)
+    n_eval = max(batch, 64)
+    tokens, targets = sequences.copy_task(
+        n_train, seq_len=scfg.seq_len, delay=scfg.delay,
+        vocab=scfg.vocab, seed=seed)
+    ev_tok, ev_tgt = sequences.copy_task(
+        n_eval, seq_len=scfg.seq_len, delay=scfg.delay,
+        vocab=scfg.vocab, seed=seed + 1)
+
+    params, axes = seq_model.init(jax.random.key(seed), scfg)
+    if analog_policy:
+        pol = presets.parse_policy(analog_policy)
+        analog = True
+    elif analog:
+        # recurrent default: NM+BM without UM — update management needs
+        # global error extrema, which a streamed temporal accumulation
+        # never materializes (the cell rejects UM configs loudly)
+        rpu = dataclasses.replace(rpu_nm_bm(), bm_mode=bm_mode,
+                                  use_pallas=use_pallas,
+                                  fuse_bwd_update=fuse_bwd_update)
+        pol = AnalogPolicy(rules=(AnalogRule("*", rpu, "nm_bm"),))
+    if analog:
+        params, _ = convert_to_analog(params, axes, pol,
+                                      key=jax.random.key(seed))
+        opt = optimizers.mixed_analog(optimizers.sgd(lr))
+    else:
+        opt = optimizers.sgd(lr)
+    opt_state = opt.init(params)
+
+    run_epoch = engine_lib.make_seq_epoch_fn(scfg, opt, batch=batch)
+    evaluate = engine_lib.make_seq_eval_fn(scfg, batch=max(batch, 64))
+    key_base = jax.random.key(seed + 1)
+    k_data, k_train, k_eval = jax.random.split(key_base, 3)
+
+    tokens, targets = jnp.asarray(tokens), jnp.asarray(targets)
+    ev_tok, ev_tgt = jnp.asarray(ev_tok), jnp.asarray(ev_tgt)
+    accs = []
+    for epoch in range(steps):
+        params, opt_state = run_epoch(params, opt_state, tokens, targets,
+                                      k_data, k_train,
+                                      jnp.asarray(epoch))
+        acc = float(evaluate(params, ev_tok, ev_tgt,
+                             jax.random.fold_in(k_eval, epoch)))
+        accs.append(acc)
+        if epoch % log_every == 0 or epoch == steps - 1:
+            print(f"[train {kind}] epoch {epoch} copy-task accuracy "
+                  f"{acc:.3f}", flush=True)
+    return {"losses": [1.0 - a for a in accs],
+            "final_loss": 1.0 - accs[-1] if accs else None,
+            "accuracies": accs}
+
+
 def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
           analog: bool = False, analog_policy: Optional[str] = None,
           ckpt_dir: Optional[str] = None,
@@ -183,8 +262,16 @@ def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
           fuse_bwd_update: bool = False,
           tile_mesh: Optional[str] = None,
           update_chunk: Optional[int] = None,
+          time_chunk: int = 1,
           max_restarts: int = 0):
     import dataclasses
+    if arch in ("lstm", "gru"):
+        return train_sequence(
+            arch, steps=steps, batch=batch, seq=seq, smoke=smoke,
+            analog=analog, analog_policy=analog_policy, lr=lr,
+            bm_mode=bm_mode, use_pallas=use_pallas,
+            fuse_bwd_update=fuse_bwd_update, time_chunk=time_chunk,
+            seed=seed, log_every=log_every)
     cfg = registry.get_config(arch, smoke=smoke)
     if fuse_bwd_update and not use_pallas and not analog_policy:
         raise ValueError("--fuse-bwd-update requires --use-pallas (the "
@@ -434,6 +521,11 @@ def main():
                          "RxC sub-tile grid on the 'array_row' x 'array_col' "
                          "crossbar device mesh (serial oracle when fewer "
                          "than R*C devices; see docs/scaling.md)")
+    ap.add_argument("--time-chunk", type=int, default=1,
+                    help="with --arch lstm|gru: timesteps per backward "
+                         "accumulation chunk (must divide the unrolled "
+                         "length; counts are bit-identical for any value "
+                         "via counter-offset pulse streams)")
     ap.add_argument("--update-chunk", type=int, default=None,
                     help="[deprecated: use ':update_chunk=N' rule "
                          "modifiers in --analog-policy] "
@@ -453,6 +545,7 @@ def main():
                 fuse_bwd_update=args.fuse_bwd_update,
                 tile_mesh=args.tile_mesh,
                 update_chunk=args.update_chunk,
+                time_chunk=args.time_chunk,
                 max_restarts=args.max_restarts)
     print(f"[train] done; final loss {res['final_loss']:.4f}")
 

@@ -63,23 +63,10 @@ def dense_init(key, d_in: int, d_out: int, axes: Tuple[str, str],
     return {"w": w}, {"w": axes}
 
 
-def dense_apply(p: Params, x: Array, *, analog=None, key=None,
-                lr=1.0) -> Array:
+def dense_apply(p: Params, x: Array, *, key=None, lr=1.0) -> Array:
     if isinstance(p, AnalogState):
         return AnalogLinear.apply(p, x.astype(jnp.float32), key,
                                   lr=lr).astype(x.dtype)
-    if "seed" in p:   # deprecated pre-AnalogState {"w","seed"} layout
-        from repro.core import analog_linear
-        from repro.core.tile import TileState
-        if analog is None:
-            raise ValueError(
-                "legacy {'w','seed'} analog params need the RPUConfig via "
-                "the `analog` argument; rebuild the state with "
-                "repro.analog (AnalogLinear / convert_to_analog)")
-        acfg = analog.normalized_for_lm()
-        st = TileState(w=p["w"], maps=None, seed=p["seed"])
-        return analog_linear.apply(st, x.astype(jnp.float32), key, acfg,
-                                   lr, bias=False).astype(x.dtype)
     y = jnp.einsum("...d,df->...f", x, p["w"].astype(x.dtype))
     if "b" in p:
         y = y + p["b"].astype(y.dtype)

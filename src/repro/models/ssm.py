@@ -15,6 +15,17 @@ O(S) total work, O(1) decode state.  All recurrence math runs in f32.
 The paper's (RPU) technique applies to the in/out projections of this block
 (they are plain MVMs -> analog tiles); the recurrence itself has no weight
 matrix and stays digital (DESIGN.md §4 inapplicability note).
+
+When a projection IS analog and its config supports streamed temporal
+accumulation (no update management, fast_rng — see
+``repro.recurrent.temporal``), the full-sequence path routes it through
+the accumulate-across-time primitive: one managed read per sequence
+position, coincidence counts accumulated position-major with the
+counter-offset pulse streams, ONE ``finalize_counts`` per tile per step —
+the same temporal weight-reuse contract as the recurrent cell, chunked on
+the SSD scan's own chunk grid.  UM configs keep the single-shot
+``AnalogLinear`` cycle (UM's gains need the global extrema only a
+materialized cycle has); the decode path (single position) always does.
 """
 
 from __future__ import annotations
@@ -66,6 +77,25 @@ def init(key, cfg: ModelConfig):
     axes["dt_bias"] = (None,)
     params["norm"], axes["norm"] = L.rmsnorm_init(d_in, cfg.param_dtype)
     return params, axes
+
+
+def _seq_dense(p, x: Array, key, chunk: int) -> Array:
+    """Dense site over a (B, S, d) sequence, temporally accumulated when
+    analog + eligible; the ``L.dense_apply`` single-shot cycle otherwise.
+    """
+    from repro.analog.modules import AnalogState
+    if isinstance(p, AnalogState) and x.ndim == 3 and x.shape[1] > 1:
+        from repro.recurrent.temporal import (temporal_dense_apply,
+                                              temporal_eligible)
+        if temporal_eligible(p.meta.cfg):
+            s = x.shape[1]
+            tc = min(chunk, s)
+            while s % tc:         # largest divisor of S <= the SSD chunk
+                tc -= 1
+            y = temporal_dense_apply(p, x.transpose(1, 0, 2), key,
+                                     time_chunk=tc)
+            return y.transpose(1, 0, 2).astype(x.dtype)
+    return L.dense_apply(p, x, key=key)
 
 
 def _split_proj(proj: Array, cfg: ModelConfig):
@@ -155,7 +185,7 @@ def forward(p, x: Array, cfg: ModelConfig, akey=None,
     """Full-sequence SSD forward.  x (B,S,d) -> (B,S,d)."""
     d_in, h, p_dim, n = dims(cfg)
     k = None if akey is None else jax.random.fold_in(akey, 0)
-    proj = L.dense_apply(p["in_proj"], x, analog=cfg.analog, key=k)
+    proj = _seq_dense(p["in_proj"], x, k, cfg.ssm.chunk)
     z, xs, b, c, dt = _split_proj(proj, cfg)
 
     xbc = jnp.concatenate([xs, b, c], axis=-1)
@@ -174,7 +204,7 @@ def forward(p, x: Array, cfg: ModelConfig, akey=None,
     y = y.reshape(*x.shape[:-1], d_in).astype(x.dtype)
     y = L.rmsnorm_apply(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
     k2 = None if akey is None else jax.random.fold_in(akey, 1)
-    out = L.dense_apply(p["out_proj"], y, analog=cfg.analog, key=k2)
+    out = _seq_dense(p["out_proj"], y, k2, cfg.ssm.chunk)
     out = shard(out, "batch", "seq", "embed_act")
     if return_state:
         return out, {"conv": new_conv, "ssm": new_state}

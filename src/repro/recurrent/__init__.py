@@ -1,0 +1,19 @@
+"""Analog recurrent training: temporal weight reuse on RPU tiles.
+
+The temporal counterpart of the conv mapping's spatial weight sharing
+(after "Training LSTM Networks with Resistive Cross-Point Devices",
+1806.00166): one tile read/transpose-read every timestep, pulse updates
+accumulated across the unrolled sequence, finalized once per training
+step — chunked/scanned bit-exact vs the fully-unrolled oracle.
+
+* :mod:`repro.recurrent.cell`     — LSTM/GRU cells (``custom_vjp`` scan)
+* :mod:`repro.recurrent.oracle`   — the unrolled single-shot reference
+* :mod:`repro.recurrent.model`    — copy-task sequence model + loss
+* :mod:`repro.recurrent.temporal` — non-recurrent accumulate-across-time
+  dense (the SSM projections' route)
+"""
+
+from repro.recurrent.cell import CellSpec, cell_apply, init_cell  # noqa: F401
+from repro.recurrent.model import SeqConfig  # noqa: F401
+from repro.recurrent.temporal import (temporal_dense_apply,  # noqa: F401
+                                      temporal_eligible)

@@ -1,0 +1,99 @@
+"""Sequence model over the analog recurrent cell: copy-task LSTM/GRU.
+
+A deliberately small stack — one recurrent cell + a dense readout — sized
+for the delayed-copy task (``data/sequences.py``) so the managed-vs-
+unmanaged reproduction of the LSTM-on-RPU sequel paper (1806.00166) runs
+at CI scale.  Every projection is a *dense site*: ``init`` builds digital
+params, and ``repro.analog.convert.convert_to_analog`` under an
+``AnalogPolicy`` rewrites any subset of ``{cell/wx, cell/wh, readout}``
+onto crossbar tiles (path-keyed deterministic seeds).  ``apply`` is
+parameter-typed — the same function runs the FP baseline and the RPU
+configuration, like every other model in ``models/``.
+
+The loss is the repo-wide SUMMED cross-entropy (masked to the answer
+span): each sequence's error vectors enter the pulse-update cycle
+unscaled, matching the paper's minibatch-of-1 update magnitudes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.recurrent.cell import CellSpec, cell_apply, init_cell
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqConfig:
+    kind: str = "lstm"                   # 'lstm' | 'gru'
+    vocab: int = 8
+    hidden: int = 32
+    seq_len: int = 4                     # payload symbols
+    delay: int = 2                       # blank gap (incl. GO marker slot)
+    time_chunk: Optional[int] = 1        # scan chunking (bit-exact knob)
+    lr: float = 0.01
+
+    @property
+    def spec(self) -> CellSpec:
+        return CellSpec(kind=self.kind, hidden=self.hidden,
+                        time_chunk=self.time_chunk)
+
+    @property
+    def t_total(self) -> int:
+        return 2 * self.seq_len + self.delay
+
+
+def init(key: Array, cfg: SeqConfig) -> Tuple[Params, Params]:
+    """Digital params + logical axes; convert with an AnalogPolicy after."""
+    k_cell, k_out = jax.random.split(key)
+    cell_p, cell_a = init_cell(k_cell, cfg.vocab, cfg.spec)
+    out_p, out_a = L.dense_init(k_out, cfg.hidden, cfg.vocab,
+                                ("embed", "vocab"), jnp.float32, bias=True)
+    return {"cell": cell_p, "readout": out_p}, \
+           {"cell": cell_a, "readout": out_a}
+
+
+def apply(params: Params, tokens: Array, key: Optional[Array],
+          cfg: SeqConfig) -> Array:
+    """tokens (B, T) int32 -> logits (T, B, V) (time-major like the scan).
+
+    ``key`` may be ``None`` only when every site is digital.
+    """
+    xs = jax.nn.one_hot(tokens.T, cfg.vocab, dtype=jnp.float32)  # (T, B, V)
+    k_cell = k_out = None
+    if key is not None:
+        k_cell, k_out = jax.random.split(key)
+    hs, _h_t, _c_t = cell_apply(params["cell"], xs, cfg.spec,
+                                key=k_cell, lr=cfg.lr)
+    return L.dense_apply(params["readout"], hs, key=k_out, lr=cfg.lr)
+
+
+def loss_fn(params: Params, tokens: Array, targets: Array,
+            key: Optional[Array], cfg: SeqConfig) -> Array:
+    """Summed masked softmax cross-entropy over the answer span."""
+    logits = apply(params, tokens, key, cfg)            # (T, B, V)
+    tgt = targets.T                                     # (T, B)
+    mask = (tgt >= 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(
+        logp, jnp.maximum(tgt, 0)[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask)
+
+
+def accuracy(params: Params, tokens: Array, targets: Array,
+             key: Optional[Array], cfg: SeqConfig) -> Array:
+    """Fraction of answer-span symbols predicted correctly (noisy
+    forward — inference runs on the same analog arrays)."""
+    logits = apply(params, tokens, key, cfg)
+    tgt = targets.T
+    mask = tgt >= 0
+    hit = (jnp.argmax(logits, -1) == tgt) & mask
+    return jnp.sum(hit.astype(jnp.float32)) / \
+        jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)

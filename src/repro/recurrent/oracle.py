@@ -1,0 +1,147 @@
+"""Fully-unrolled reference for the analog recurrent cell.
+
+This is the *oracle* side of the temporal-reuse parity contract
+(``tests/test_recurrent.py``): a plain Python-loop implementation with no
+``lax.scan``, no per-timestep count accumulation and no fused launches —
+
+* forward: one managed ``tile_forward`` read per gate-tile per timestep
+  (the same ``fold_in(key, t)`` read-key schedule as the scanned cell);
+* backward: one managed ``tile_backward`` transpose read per timestep,
+  chaining BPTT through the shared digital gate backward;
+* update: every timestep's (driver, error) pair is **materialized and
+  stacked timestep-major**, then ``update.pulse_update`` runs ONCE per
+  tile over the whole (T*B)-row batch — the single-shot cycle whose pulse
+  streams the scanned path's per-timestep ``row_offset = t * B`` chunks
+  must slice bit-exactly.
+
+``cell._analog_scan``'s VJP must reproduce every output of
+:func:`unrolled_reference` with ``assert_array_equal`` for any
+``time_chunk`` and for both the separate-launch and fused
+(``cfg.fuse_bwd_update``) backward paths.
+
+Each timestep's arithmetic runs inside a per-step ``jax.jit`` unit
+(:func:`_fwd_step` / :func:`_bwd_step`).  Fully-eager per-op dispatch
+rounds elementwise chains differently from compiled code (no fusion /
+FMA contraction), so an un-jitted Python loop sits a ulp away from any
+``lax.scan``; a compiled unit per timestep is bit-identical to the scan
+body at every chunk size, which keeps the oracle independent in
+*structure* (no scan, no count accumulation, single-shot update) while
+sharing the compiled-arithmetic contract the parity test needs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tile as tile_lib
+from repro.core import update as update_lib
+from repro.core.device import RPUConfig, sample_device_maps
+from repro.core.tile import TileState
+from repro.recurrent.cell import (CellSpec, _augment, _nonlin_bwd,
+                                  _nonlin_fwd, _split3)
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _fwd_step(spec: CellSpec, cfg: RPUConfig, wx: Array, sx: Array,
+              wh: Array, sh: Array, x_t: Array, h: Array, c: Array,
+              k_fx: Array, k_fh: Array, t: Array) -> Tuple[Array, ...]:
+    """One timestep's two managed reads + gate nonlinearity, compiled.
+
+    The ``fold_in(key, t)`` read-key derivations happen INSIDE the unit,
+    exactly like the scanned cell's step body: their threefry ops are part
+    of the compiled program, and XLA's fusion choices elsewhere in the
+    step are sensitive to their presence.
+    """
+    wx_st = TileState(w=wx, maps=None, seed=sx)
+    wh_st = TileState(w=wh, maps=None, seed=sh)
+    xa = _augment(spec, x_t)
+    ax = tile_lib.tile_forward(wx_st, xa, jax.random.fold_in(k_fx, t), cfg)
+    bh = tile_lib.tile_forward(wh_st, h, jax.random.fold_in(k_fh, t), cfg)
+    h2, c2 = _nonlin_fwd(spec, ax, bh, h, c)
+    return ax, bh, xa, h2, c2
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _bwd_step(spec: CellSpec, cfg: RPUConfig, wx: Array, sx: Array,
+              wh: Array, sh: Array, ax: Array, bh: Array, hp: Array,
+              cp: Array, g_t: Array, dh: Array, dc: Array, k_bx: Array,
+              k_bh: Array, t: Array) -> Tuple[Array, ...]:
+    """One timestep's gate backward + two transpose reads, compiled
+    (fold_in inside the unit — see :func:`_fwd_step`)."""
+    wx_st = TileState(w=wx, maps=None, seed=sx)
+    wh_st = TileState(w=wh, maps=None, seed=sh)
+    dh = dh + g_t
+    delta_x, delta_h, dh_loc, dc_prev = _nonlin_bwd(
+        spec, ax, bh, hp, cp, dh, dc)
+    zx = tile_lib.tile_backward(wx_st, delta_x,
+                                jax.random.fold_in(k_bx, t), cfg)
+    zh = tile_lib.tile_backward(wh_st, delta_h,
+                                jax.random.fold_in(k_bh, t), cfg)
+    return delta_x, delta_h, zx, dh_loc + zh, dc_prev
+
+
+def unrolled_reference(spec: CellSpec, cfg: RPUConfig, wx: Array, sx: Array,
+                       wh: Array, sh: Array, xs: Array, h0: Array,
+                       c0: Array, key: Array, lr: Any, g_hs: Array,
+                       g_ht: Optional[Array] = None,
+                       g_ct: Optional[Array] = None) -> Dict[str, Array]:
+    """Unrolled forward + BPTT + single-shot update for one training step.
+
+    Returns ``hs/h_t/c_t`` (forward), ``dxs/dh0/dc0`` (input cotangents)
+    and ``wx_bar/wh_bar`` (the ``W - clip(W + DW_pulse)`` weight
+    cotangents), all bit-comparable to ``jax.vjp`` of the scanned cell.
+    """
+    t_total, b = xs.shape[0], xs.shape[1]
+
+    k_f, k_b, k_u = _split3(key)
+    k_fx, k_fh = jax.random.split(k_f)
+    k_bx, k_bh = jax.random.split(k_b)
+    k_ux, k_uh = jax.random.split(k_u)
+
+    # ---- forward: T managed reads per tile --------------------------------
+    h, c = h0, c0
+    hs, res = [], []
+    for t in range(t_total):
+        ax, bh, xa, h2, c2 = _fwd_step(
+            spec, cfg, wx, sx, wh, sh, xs[t], h, c, k_fx, k_fh,
+            jnp.asarray(t, jnp.int32))
+        res.append((ax, bh, h, c, xa))
+        hs.append(h2)
+        h, c = h2, c2
+
+    # ---- BPTT: T transpose reads per tile, pairs materialized -------------
+    dh = jnp.zeros_like(h) if g_ht is None else g_ht
+    dc = jnp.zeros_like(c) if g_ct is None else g_ct
+    dxs = [None] * t_total
+    pairs_x, pairs_h = [None] * t_total, [None] * t_total
+    for t in reversed(range(t_total)):
+        ax, bh, hp, cp, xa = res[t]
+        delta_x, delta_h, zx, dh, dc = _bwd_step(
+            spec, cfg, wx, sx, wh, sh, ax, bh, hp, cp, g_hs[t], dh, dc,
+            k_bx, k_bh, jnp.asarray(t, jnp.int32))
+        pairs_x[t] = (xa, delta_x)
+        pairs_h[t] = (hp, delta_h)
+        dxs[t] = zx[..., :xs.shape[-1]]
+
+    # ---- update: ONE single-shot pulse cycle per tile ---------------------
+    maps_x = sample_device_maps(sx, wx.shape[0], wx.shape[1], cfg)
+    maps_h = sample_device_maps(sh, wh.shape[0], wh.shape[1], cfg)
+    xx = jnp.stack([p[0] for p in pairs_x])          # (T, B, n_x)
+    dx = jnp.stack([p[1] for p in pairs_x])          # (T, B, G*H)
+    hh = jnp.stack([p[0] for p in pairs_h])
+    dhh = jnp.stack([p[1] for p in pairs_h])
+    new_wx = update_lib.pulse_update(wx, maps_x, xx, -dx, k_ux, cfg, lr)
+    new_wh = update_lib.pulse_update(wh, maps_h, hh, -dhh, k_uh, cfg, lr)
+
+    return {
+        "hs": jnp.stack(hs), "h_t": h, "c_t": c,
+        "dxs": jnp.stack(dxs), "dh0": dh, "dc0": dc,
+        "wx_bar": (wx - new_wx).astype(wx.dtype),
+        "wh_bar": (wh - new_wh).astype(wh.dtype),
+    }

@@ -257,6 +257,105 @@ def make_cnn_eval_fn(cfg, *, batch: int = 256) -> Callable:
 
 
 # ---------------------------------------------------------------------------
+# Scan-fused recurrent (sequence) epoch: scan-over-time nested in
+# scan-over-steps
+# ---------------------------------------------------------------------------
+
+def make_seq_step_fn(cfg, opt: Optimizer) -> Callable:
+    """Single sequence-model train step (``repro.recurrent.model``).
+
+    ``step(params, opt_state, tokens, targets, key) -> (params,
+    opt_state)``.  The backward pass runs the cell's temporal-reuse VJP:
+    per-timestep transpose reads, coincidence counts accumulated across
+    the whole unrolled sequence, ONE ``finalize_counts`` per tile.
+    Returned unjitted for :mod:`repro.analysis` traceability, mirroring
+    :func:`make_cnn_step_fn`.
+    """
+    from repro.recurrent import model as seq_model
+
+    def step(params, opt_state, tokens, targets, key):
+        g = jax.grad(seq_model.loss_fn, allow_int=True)(
+            params, tokens, targets, key, cfg)
+        return opt.update(g, opt_state, params)
+
+    return step
+
+
+def make_seq_epoch_fn(cfg, opt: Optimizer, *, batch: int) -> Callable:
+    """Jitted epoch program for the sequence-copy trainer.
+
+    ``run_epoch(params, opt_state, tokens, targets, k_data, k_train,
+    epoch) -> (params, opt_state)`` — the outer ``lax.scan`` walks
+    minibatches while each step's loss runs the cell's inner
+    scan-over-time, with (params, opt_state) donated exactly like the CNN
+    epoch.  Key schedule: ``fold_in(k_train, epoch * spe + i)`` — the
+    repo-wide contract from :func:`fold_in_keys`.
+    """
+    step_fn = make_seq_step_fn(cfg, opt)
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def run_epoch(params, opt_state, tokens, targets, k_data, k_train,
+                  epoch):
+        n = tokens.shape[0]
+        spe = n // batch
+        used = spe * batch
+        perm = jax.random.permutation(
+            jax.random.fold_in(k_data, epoch), n)[:used]
+        tb = tokens[perm].reshape(spe, batch, *tokens.shape[1:])
+        gb = targets[perm].reshape(spe, batch, *targets.shape[1:])
+        keys = fold_in_keys(k_train, epoch * spe + jnp.arange(spe))
+
+        def body(carry, inp):
+            p, s = carry
+            t, g, k = inp
+            p, s = step_fn(p, s, t, g, k)
+            return (p, s), ()
+
+        (params, opt_state), _ = jax.lax.scan(
+            body, (params, opt_state), (tb, gb, keys))
+        return params, opt_state
+
+    return run_epoch
+
+
+def make_seq_eval_fn(cfg, *, batch: int = 256) -> Callable:
+    """Scan-fused answer-span accuracy over a token split.
+
+    ``evaluate(params, tokens, targets, key) -> accuracy`` (device
+    scalar); inference runs the same noisy analog forward as training.
+    """
+    from repro.recurrent import model as seq_model
+
+    @jax.jit
+    def evaluate(params, tokens, targets, key):
+        n = tokens.shape[0]
+        nb = -(-n // batch)
+        pad = nb * batch - n
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+        # padded rows carry all-IGNORE targets: they add no answer span
+        targets = jnp.pad(targets, ((0, pad), (0, 0)),
+                          constant_values=-1)
+        tb = tokens.reshape(nb, batch, -1)
+        gb = targets.reshape(nb, batch, -1)
+        keys = fold_in_keys(key, jnp.arange(nb) * batch)
+
+        def body(acc, inp):
+            t, g, k = inp
+            logits = seq_model.apply(params, t, k, cfg)   # (T, B, V)
+            tgt = g.T
+            mask = tgt >= 0
+            hit = (jnp.argmax(logits, -1) == tgt) & mask
+            return (acc[0] + jnp.sum(hit.astype(jnp.float32)),
+                    acc[1] + jnp.sum(mask.astype(jnp.float32))), ()
+
+        (correct, total), _ = jax.lax.scan(
+            body, (jnp.zeros(()), jnp.zeros(())), (tb, gb, keys))
+        return correct / jnp.maximum(total, 1.0)
+
+    return evaluate
+
+
+# ---------------------------------------------------------------------------
 # Generic multi-step scan (LM training chunks)
 # ---------------------------------------------------------------------------
 

@@ -250,19 +250,19 @@ def test_dense_init_bias_paths():
                                rtol=1e-5, atol=1e-5)
 
 
-def test_dense_apply_legacy_seed_dict_shim():
+def test_dense_apply_legacy_seed_dict_shim_removed():
+    """The ``"seed" in p`` dict-sniff era is over: ``AnalogState`` is the
+    single analog parameter type, and ``dense_apply`` no longer grows an
+    ``analog=`` escape hatch for config-less legacy dicts."""
     from repro.models import layers as L
     cfg = dev.rpu_nm_bm()
     st, _ = L.dense_init(jax.random.key(0), 6, 4, ("embed", "mlp"),
                          jnp.float32, analog=cfg)
-    legacy = {"w": st.w, "seed": st.seed}
     x = jax.random.normal(jax.random.key(1), (2, 6))
     k = jax.random.key(2)
-    y_new = L.dense_apply(st, x, key=k)
-    y_old = L.dense_apply(legacy, x, analog=cfg, key=k)
-    np.testing.assert_array_equal(np.asarray(y_new), np.asarray(y_old))
-    with pytest.raises(ValueError):
-        L.dense_apply(legacy, x, key=k)   # legacy dict without its config
+    assert L.dense_apply(st, x, key=k).shape == (2, 4)
+    with pytest.raises(TypeError):
+        L.dense_apply({"w": st.w, "seed": st.seed}, x, analog=cfg, key=k)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,101 @@
+"""Counter-offset stream disjointness: the property behind temporal reuse.
+
+The recurrent cell's chunked update is bit-exact vs the unrolled oracle
+because ``sample_signed_streams(..., row_offset=r)`` draws EXACTLY the
+Bernoulli variates rows ``[r, r + chunk)`` of the single-shot call draw
+— pairwise non-overlapping counter ranges for non-overlapping row
+blocks, union bit-identical to the unchunked stream.  This suite pins
+that as a *property over arbitrary partitions*: for any way of cutting
+``total_rows`` into contiguous chunks, the per-chunk streams concatenate
+to the single-shot stream, and the per-chunk coincidence counts sum to
+the single-shot counts (integers in f32 — exact).
+
+Runs under Hypothesis when installed, else a deterministic seed sweep
+(``tests/prop_harness.py`` — never silently skipped).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from prop_harness import seeded_property
+from repro.core import update as update_lib
+from repro.core.device import rpu_nm_bm
+
+
+def _random_partition(rng, total):
+    """Cut ``total`` rows into contiguous chunks at random boundaries."""
+    n_cuts = int(rng.integers(0, total))
+    cuts = sorted(set(rng.integers(1, total, size=n_cuts).tolist()))
+    bounds = [0] + cuts + [total]
+    return list(zip(bounds[:-1], bounds[1:]))
+
+
+@seeded_property(n_examples=25)
+def test_stream_partition_union_is_single_shot(seed):
+    rng = np.random.default_rng(seed)
+    total = int(rng.integers(2, 12))
+    n = int(rng.integers(1, 6))
+    bl = int(rng.integers(1, 12))
+    key = jax.random.key(int(rng.integers(0, 2 ** 31)))
+    v = jnp.asarray(rng.standard_normal((total, n)), jnp.float32)
+    gain = jnp.asarray(abs(rng.standard_normal()) + 0.1, jnp.float32)
+
+    full = update_lib.sample_signed_streams(key, v, gain, bl, True)
+    parts = []
+    for lo, hi in _random_partition(rng, total):
+        parts.append(update_lib.sample_signed_streams(
+            key, v[lo:hi], gain, bl, True,
+            row_offset=jnp.uint32(lo)))
+    np.testing.assert_array_equal(
+        np.asarray(jnp.concatenate(parts, axis=0)), np.asarray(full),
+        err_msg=f"partition union != single shot (seed={seed})")
+
+
+@seeded_property(n_examples=25)
+def test_stream_chunks_pairwise_disjoint_counters(seed):
+    """Distinct row offsets never alias: two disjoint blocks of the same
+    logical batch draw independent (non-identical) variates even for
+    identical row *values* — the counters, not the data, key the draws."""
+    rng = np.random.default_rng(seed)
+    n, bl = int(rng.integers(2, 6)), int(rng.integers(4, 12))
+    key = jax.random.key(int(rng.integers(0, 2 ** 31)))
+    # same row value repeated: only the counter offset distinguishes them
+    v = jnp.asarray(np.tile(rng.standard_normal((1, n)), (2, 1)),
+                    jnp.float32)
+    gain = jnp.asarray(0.5, jnp.float32)
+    s0 = update_lib.sample_signed_streams(key, v[:1], gain, bl, True,
+                                          row_offset=jnp.uint32(0))
+    s1 = update_lib.sample_signed_streams(key, v[:1], gain, bl, True,
+                                          row_offset=jnp.uint32(1))
+    full = update_lib.sample_signed_streams(key, v, gain, bl, True)
+    np.testing.assert_array_equal(np.asarray(s0[0]), np.asarray(full[0]))
+    np.testing.assert_array_equal(np.asarray(s1[0]), np.asarray(full[1]))
+    assert not np.array_equal(np.asarray(s0), np.asarray(s1)), \
+        "disjoint counter ranges produced identical streams"
+
+
+@seeded_property(n_examples=15)
+def test_count_partition_sums_to_single_shot(seed):
+    """stream_counts over any partition (with row offsets) sums exactly
+    to the single-shot counts — the accumulate-across-time contract."""
+    rng = np.random.default_rng(seed)
+    cfg = rpu_nm_bm()
+    total = int(rng.integers(2, 10))
+    n_in, n_out = int(rng.integers(2, 6)), int(rng.integers(2, 6))
+    key = jax.random.key(int(rng.integers(0, 2 ** 31)))
+    k_a, k_b = jax.random.split(key)
+    x = jnp.asarray(rng.standard_normal((total, n_in)), jnp.float32)
+    d = jnp.asarray(rng.standard_normal((total, n_out)), jnp.float32)
+    c = jnp.asarray(0.3, jnp.float32)
+
+    up_f, dn_f = update_lib.stream_counts(x, d, c, c, k_a, k_b, cfg)
+    up_s = jnp.zeros_like(up_f)
+    dn_s = jnp.zeros_like(dn_f)
+    for lo, hi in _random_partition(rng, total):
+        u, dn = update_lib.stream_counts(
+            x[lo:hi], d[lo:hi], c, c, k_a, k_b, cfg,
+            row_offset=jnp.uint32(lo))
+        up_s, dn_s = up_s + u, dn_s + dn
+    np.testing.assert_array_equal(np.asarray(up_s), np.asarray(up_f))
+    np.testing.assert_array_equal(np.asarray(dn_s), np.asarray(dn_f))
